@@ -1,0 +1,19 @@
+"""Shared benchmark utilities: CSV emission per the harness contract."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Iterable
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6

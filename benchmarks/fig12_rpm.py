@@ -1,0 +1,29 @@
+"""Paper Fig. 12: throughput/latency vs offered load (RPM).
+
+Validation: below cloud capacity PICE ~ cloud-only; past it, cloud-only
+saturates (latency blows up) while PICE keeps scaling via edge offload."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core.simulator import (SimConfig, make_requests,
+                                  simulate_cloud_only, simulate_pice,
+                                  simulate_routing)
+
+
+def run(n_requests: int = 250):
+    out = {}
+    for rpm in (10, 20, 30, 40, 60, 80):
+        for name, fn in (("cloud_only", simulate_cloud_only),
+                         ("routing", simulate_routing),
+                         ("pice", simulate_pice)):
+            cfg = SimConfig(cloud_model="llama3-70b", cloud_batch=20,
+                            rpm=float(rpm), n_requests=n_requests)
+            res, us = timed(fn, cfg, make_requests(n_requests, rpm, cfg.seed))
+            out[(rpm, name)] = res
+            emit(f"fig12/rpm_{rpm}/{name}", us,
+                 f"thr={res.throughput_per_min:.2f};lat={res.avg_latency_s:.1f}s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Fig. 13: impact of the job-queue length cap.
+
+Validation: optimum near the number of edge devices (4); much larger queues
+inflate waiting time and end-to-end latency."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, timed
+from repro.core.simulator import SimConfig, make_requests, simulate_pice
+
+
+def run(n_requests: int = 250):
+    out = {}
+    for qmax in (1, 2, 4, 8, 16, 32):
+        cfg = SimConfig(cloud_model="llama3-70b", cloud_batch=20, rpm=40,
+                        n_requests=n_requests, queue_max=qmax)
+        res, us = timed(simulate_pice, cfg,
+                        make_requests(n_requests, cfg.rpm, cfg.seed))
+        out[qmax] = res
+        emit(f"fig13/queue_{qmax}", us,
+             f"thr={res.throughput_per_min:.2f};lat={res.avg_latency_s:.1f}s")
+    best = max(out, key=lambda q: out[q].throughput_per_min)
+    emit("fig13/best_queue_len", 0.0, f"best={best}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

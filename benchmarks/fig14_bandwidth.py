@@ -1,0 +1,33 @@
+"""Paper Fig. 14: impact of cloud<->edge bandwidth.
+
+Validation: minimal sensitivity — only queries/sketches cross the network, a
+few tens of ms even at low bandwidth; inference time dominates."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core.simulator import (SimConfig, make_requests,
+                                  simulate_cloud_only, simulate_pice,
+                                  simulate_routing)
+
+
+def run(n_requests: int = 250):
+    out = {}
+    for bw in (10, 50, 100, 500, 1000):
+        for name, fn in (("cloud_only", simulate_cloud_only),
+                         ("routing", simulate_routing),
+                         ("pice", simulate_pice)):
+            cfg = SimConfig(cloud_model="llama3-70b", cloud_batch=20, rpm=30,
+                            n_requests=n_requests, bandwidth_mbps=float(bw))
+            res, us = timed(fn, cfg, make_requests(n_requests, cfg.rpm,
+                                                   cfg.seed))
+            out[(bw, name)] = res
+            emit(f"fig14/bw_{bw}mbps/{name}", us,
+                 f"thr={res.throughput_per_min:.2f};lat={res.avg_latency_s:.1f}s")
+    ths = [out[(bw, "pice")].throughput_per_min for bw in (10, 50, 100, 500, 1000)]
+    emit("fig14/pice_bw_spread", 0.0,
+         f"spread={(max(ths)-min(ths))/max(ths):.1%}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Fig. 3: throughput vs the LLM's max response tokens.
+
+Sweeps the cloud generation cap (full answers truncated to `max_tokens`);
+validation target: cutting 500 -> 200 tokens lifts throughput 1.5-2x."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, timed
+from repro.core.simulator import SimConfig, _Server, _finalize, make_requests
+from repro.core.profiler import paper_latency_model
+
+
+def run(n_requests: int = 300):
+    out = {}
+    base = None
+    for max_tokens in (100, 200, 300, 400, 500):
+        cfg = SimConfig(cloud_model="llama3-70b", cloud_batch=20, rpm=45,
+                        n_requests=n_requests)
+        reqs = make_requests(cfg.n_requests, cfg.rpm, cfg.seed)
+        cloud = paper_latency_model(cfg.cloud_model, "cloud")
+        server = _Server(cfg.cloud_batch)
+        toks = 0
+        for r in reqs:
+            l = min(r.answer_len, max_tokens)
+            r.done_s = server.submit(r.arrival_s, cloud.f(l))
+            r.mode = "cloud_full"
+            toks += l
+        res = _finalize(reqs, toks, 0)
+        out[max_tokens] = res
+        if max_tokens == 500:
+            base = res
+        emit(f"fig3/max_tokens_{max_tokens}", 0.0,
+             f"thr={res.throughput_per_min:.2f}/min")
+    ratio = out[200].throughput_per_min / out[500].throughput_per_min
+    emit("fig3/ratio_200_vs_500", 0.0, f"ratio={ratio:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 6: dynamic vs static scheduling (throughput/latency), plus
+cloud-only and routing for reference."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core.simulator import (SimConfig, make_requests,
+                                  simulate_cloud_only, simulate_pice,
+                                  simulate_routing)
+
+
+def run(n_requests: int = 300):
+    base = dict(cloud_model="llama3-70b", cloud_batch=20, rpm=60,
+                n_requests=n_requests)
+    rows = {}
+    for name, fn, kw in [
+        ("cloud_only", simulate_cloud_only, {}),
+        ("routing", simulate_routing, {}),
+        ("pice_static", simulate_pice, {"dynamic": False}),
+        ("pice_dynamic", simulate_pice, {"dynamic": True}),
+    ]:
+        cfg = SimConfig(**base, **kw)
+        res, us = timed(fn, cfg, make_requests(n_requests, cfg.rpm, cfg.seed))
+        rows[name] = res
+        emit(f"fig6/{name}", us, f"thr={res.throughput_per_min:.2f}/min;"
+                                 f"lat={res.avg_latency_s:.2f}s")
+    gain = (rows["pice_dynamic"].throughput_per_min
+            / max(rows["pice_static"].throughput_per_min, 1e-9) - 1)
+    emit("fig6/dynamic_over_static", 0.0, f"throughput_gain={gain:.1%}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

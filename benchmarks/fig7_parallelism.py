@@ -1,0 +1,51 @@
+"""Paper Fig. 7: optimal edge parallelism vs sketch length per task type, and
+the latency effect of the parallel mechanism (binary-tree merging).
+
+Validation targets: parallelism grows with sketch length then saturates
+(edge memory/KV limits, modeled via max_parallelism and prompt overhead);
+short-answer categories stay at low parallelism."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.exec_optimizer import plan_expansion
+from repro.core.profiler import paper_latency_model
+
+
+def run():
+    edge = paper_latency_model("llama3-8b", "edge")
+    cloud = paper_latency_model("llama3-70b", "cloud")
+    out = {}
+    # generic/roleplay: many sentences; math/common-sense: few
+    for category, toks_per_sent in (("generic", 12), ("roleplay", 14),
+                                    ("math", 30), ("common-sense", 25)):
+        for sketch_tokens in (50, 100, 200, 300, 500, 700):
+            n_sent = max(1, sketch_tokens // toks_per_sent)
+            sentences = [" ".join(["w"] * toks_per_sent)] * n_sent
+            answer_len = sketch_tokens * 3
+
+            def lat(p, longest):
+                # KV/prompt overhead: each parallel prompt re-reads the sketch
+                overhead = 0.002 * sketch_tokens * p
+                return edge.f(longest) + overhead
+
+            # Eq.(2) budget nets out the cloud's sketch-generation time
+            budget = cloud.f(answer_len) - cloud.f(sketch_tokens)
+            plan = plan_expansion(sentences, lat, latency_budget_s=budget,
+                                  max_parallelism=16)
+            out[(category, sketch_tokens)] = plan
+            emit(f"fig7/{category}/sketch_{sketch_tokens}", 0.0,
+                 f"parallelism={plan.parallelism};"
+                 f"lat={plan.est_latency_s:.2f}s")
+    # latency reduction vs sequential expansion at 500-token sketches
+    sentences = [" ".join(["w"] * 12)] * (500 // 12)
+    seq_lat = edge.f(500 * 3)
+    plan = plan_expansion(sentences, lambda p, l: edge.f(l) + 0.002 * 500 * p,
+                          latency_budget_s=seq_lat, max_parallelism=16)
+    emit("fig7/latency_reduction_500tok", 0.0,
+         f"sequential={seq_lat:.1f}s;parallel={plan.est_latency_s:.1f}s;"
+         f"saved={seq_lat - plan.est_latency_s:.1f}s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference.
+
+NOTE: interpret-mode wall time on CPU says nothing about TPU performance —
+the derived column carries the structural numbers that matter (FLOPs, bytes,
+arithmetic intensity); wall time is reported only to satisfy the CSV
+contract and catch pathological regressions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: prefill tile
+    from repro.kernels.flash_attention import ops as fa, ref as fa_ref
+    B, S, H, hd = 1, 512, 4, 64
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    flops = 4 * B * H * S * S * hd
+    _, us = timed(lambda: jax.block_until_ready(
+        fa.flash_attention(q, k, v, block_q=128, block_kv=128)))
+    emit("kernels/flash_attention_pallas", us, f"flops={flops:.2e}")
+    _, us = timed(lambda: jax.block_until_ready(fa_ref.mha_ref(q, k, v)))
+    emit("kernels/flash_attention_ref", us, f"flops={flops:.2e}")
+
+    # decode attention: the PICE hotspot (KV streaming)
+    from repro.kernels.decode_attention import ops as da, ref as da_ref
+    B, S, Hq, Hkv, hd = 4, 4096, 8, 2, 64
+    q1 = jax.random.normal(key, (B, 1, Hq, hd), jnp.float32)
+    kc = jax.random.normal(key, (B, S, Hkv, hd), jnp.float32)
+    vc = jax.random.normal(key, (B, S, Hkv, hd), jnp.float32)
+    lens = jnp.full((B,), S, jnp.int32)
+    bytes_ = 2 * B * S * Hkv * hd * 4
+    _, us = timed(lambda: jax.block_until_ready(
+        da.decode_attention(q1, kc, vc, lens, block_s=512)))
+    emit("kernels/decode_attention_pallas", us,
+         f"kv_bytes={bytes_:.2e};ai={4*Hq*hd/(2*Hkv*hd*4):.2f}flops_per_byte")
+    _, us = timed(lambda: jax.block_until_ready(
+        da_ref.decode_attention_ref(q1, kc, vc, lens)))
+    emit("kernels/decode_attention_ref", us, f"kv_bytes={bytes_:.2e}")
+
+    # rmsnorm
+    from repro.kernels.rmsnorm import ops as rn, ref as rn_ref
+    x = jax.random.normal(key, (4096, 1024), jnp.bfloat16)
+    s = jax.random.normal(key, (1024,))
+    _, us = timed(lambda: jax.block_until_ready(rn.rmsnorm(x, s)))
+    emit("kernels/rmsnorm_pallas", us, f"bytes={x.size*2*2:.2e}")
+    _, us = timed(lambda: jax.block_until_ready(rn_ref.rmsnorm_ref(x, s)))
+    emit("kernels/rmsnorm_ref", us, f"bytes={x.size*2*2:.2e}")
+
+    # ssd scan
+    from repro.kernels.ssm_scan import ops as ssm, ref as ssm_ref
+    Bb, S, H, P, N = 2, 1024, 4, 64, 64
+    x = jax.random.normal(key, (Bb, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(key, (Bb, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(key, (H,)))
+    Bm = jax.random.normal(key, (Bb, S, N)) * 0.3
+    Cm = jax.random.normal(key, (Bb, S, N)) * 0.3
+    flops = 2 * Bb * S * H * P * N * 3
+    _, us = timed(lambda: jax.block_until_ready(
+        ssm.ssm_scan(x, dt, A, Bm, Cm, chunk=128)[0]))
+    emit("kernels/ssm_scan_pallas", us, f"flops={flops:.2e}")
+    _, us = timed(lambda: jax.block_until_ready(
+        ssm_ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=128)[0]))
+    emit("kernels/ssm_scan_ref", us, f"flops={flops:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Roofline analysis over the dry-run artifacts (see EXPERIMENTS.md
+§Roofline). Emits one row per (arch x shape x mesh) and writes
+artifacts/roofline.md with the full table."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.distributed.roofline import load_rows, suggestion
+
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def run(mesh: str = "pod16x16", write_md: bool = True):
+    rows = load_rows(str(ART / "dryrun"), mesh=mesh)
+    lines = [
+        f"# Roofline — mesh {mesh} (197 TFLOP/s bf16, 819 GB/s HBM, "
+        f"50 GB/s ICI per chip)",
+        "",
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL_FLOPS | useful ratio | scan-undercount | "
+        "next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.status != "ok":
+            emit(f"roofline/{mesh}/{r.arch}/{r.shape}", 0.0,
+                 f"status={r.status}")
+            lines.append(f"| {r.arch} | {r.shape} | - | - | - | "
+                         f"{r.status} | - | - | - | {r.note} |")
+            continue
+        emit(f"roofline/{mesh}/{r.arch}/{r.shape}", r.dominant_value() * 1e6,
+             f"dom={r.dominant};compute={r.compute_s:.4f}s;"
+             f"memory={r.memory_s:.4f}s;coll={r.collective_s:.4f}s;"
+             f"ratio={r.useful_ratio:.2f}")
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.4f} | {r.memory_s:.4f} "
+            f"| {r.collective_s:.4f} | **{r.dominant}** | "
+            f"{r.model_flops:.3e} | {r.useful_ratio:.2f} | "
+            f"{'yes' if r.scan_undercount else ''} | {suggestion(r)} |")
+    if write_md:
+        ART.mkdir(exist_ok=True)
+        (ART / f"roofline_{mesh}.md").write_text("\n".join(lines) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

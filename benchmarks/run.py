@@ -1,0 +1,62 @@
+"""Benchmark runner: one function per paper table/figure + roofline + kernels.
+
+Prints ``name,us_per_call,derived`` CSV rows. Heavy real-compute benchmarks
+(fig9 ensemble, fig10 finetune) are included by default; pass --fast to run
+only the calibrated-simulator and analysis benchmarks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip real-compute (model-training) benchmarks")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_sketch_length, fig6_scheduler,
+                            fig7_parallelism, fig12_rpm, fig13_queue,
+                            fig14_bandwidth, kernels_bench, roofline,
+                            table3_efficiency)
+
+    suites = [
+        ("table3", table3_efficiency.run),
+        ("fig3", fig3_sketch_length.run),
+        ("fig6", fig6_scheduler.run),
+        ("fig7", fig7_parallelism.run),
+        ("fig12", fig12_rpm.run),
+        ("fig13", fig13_queue.run),
+        ("fig14", fig14_bandwidth.run),
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline.run),
+    ]
+    if not args.fast:
+        from benchmarks import fig9_ensemble, fig10_finetune
+        suites += [
+            ("fig9", fig9_ensemble.run),
+            ("fig10", fig10_finetune.run),
+        ]
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = [(n, f) for n, f in suites if n in keep]
+
+    failures = 0
+    for name, fn in suites:
+        print(f"# --- {name} ---", file=sys.stderr)
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"benchmark {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark suite(s) failed")
+
+
+if __name__ == "__main__":
+    main()

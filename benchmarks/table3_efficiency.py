@@ -1,0 +1,57 @@
+"""Paper Table III: inference efficiency (throughput + latency) of
+Cloud-only / Edge-only / Routing / PICE across cloud models, under the
+paper's protocol (RPM = 1.5 x cloud max batch size).
+
+Validation targets: PICE 1.5-2x cloud-only throughput for 70B-class clouds;
+latency reduction >= 43%; Llama3-8B cloud => PICE ~ cloud-only; edge-only
+worst; routing below cloud-only under load."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core.simulator import METHODS, SimConfig, make_requests
+
+# (cloud model, cloud max batch) — batch scaled inversely with model size as
+# in the paper's setup ("other devices and models proportionally adjusted")
+SETTINGS = [
+    ("qwen2.5-72b", 20),
+    ("llama3-70b", 20),
+    ("qwen2.5-32b", 44),
+    ("llama3-8b", 80),
+    ("qwen2.5-7b", 84),
+    ("qwen2.5-1.5b", 120),
+]
+
+
+def run(n_requests: int = 300):
+    rows = {}
+    for model, batch in SETTINGS:
+        edge = tuple(m for m, _ in SETTINGS
+                     if _param_rank(m) < _param_rank(model)) or ("qwen2.5-1.5b",)
+        cfg = SimConfig(cloud_model=model, cloud_batch=batch,
+                        rpm=1.5 * batch, n_requests=n_requests,
+                        edge_models=edge[-3:])
+        for method, fn in METHODS.items():
+            reqs = make_requests(cfg.n_requests, cfg.rpm, cfg.seed)
+            res, us = timed(fn, cfg, reqs)
+            rows[(model, method)] = res
+            emit(f"table3/{model}/{method}", us,
+                 f"thr={res.throughput_per_min:.2f}/min;"
+                 f"lat={res.avg_latency_s:.2f}s")
+        c, p = rows[(model, "cloud_only")], rows[(model, "pice")]
+        ratio = p.throughput_per_min / max(c.throughput_per_min, 1e-9)
+        cut = 1 - p.avg_latency_s / max(c.avg_latency_s, 1e-9)
+        emit(f"table3/{model}/pice_vs_cloud", 0.0,
+             f"tput_ratio={ratio:.2f};latency_cut={cut:.1%}")
+    return rows
+
+
+_RANKS = {"qwen2.5-1.5b": 0, "qwen2.5-7b": 1, "llama3-8b": 2,
+          "qwen2.5-32b": 3, "llama3-70b": 4, "qwen2.5-72b": 5}
+
+
+def _param_rank(m):
+    return _RANKS[m]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod topology tour: how PICE maps onto the production mesh.
+
+Builds the 2x16x16 mesh (512 placeholder devices), shows the cloud/edge pod
+split, and prints the actual parameter/cache shardings chosen for one
+architecture — the same shardings the dry-run compiles with.
+
+Run:  PYTHONPATH=src python examples/multipod_topology.py [--arch qwen3-8b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.registry import SHAPES, input_specs
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=True)
+    print(f"production mesh: {dict(mesh.shape)} over {mesh.devices.size} chips")
+    print("  pod 0 -> PICE cloud engine (the big LLM, TP over `model`, "
+          "DP over `data`)")
+    print("  pod 1 -> PICE edge fleet (SLM replicas across `data` x `model` "
+          "subgroups)\n")
+
+    cfg = registry.get_config(args.arch)
+    params_shape = jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    psh = sh.param_shardings(cfg, mesh, params_shape)
+
+    print(f"== {args.arch}: parameter shardings (first 12 leaves) ==")
+    flat, _ = jax.tree_util.tree_flatten_with_path(psh)
+    shapes, _ = jax.tree_util.tree_flatten_with_path(params_shape)
+    for (path, s), (_, shp) in list(zip(flat, shapes))[:12]:
+        name = jax.tree_util.keystr(path)
+        print(f"  {name:55s} {str(shp.shape):24s} -> {s.spec}")
+
+    shape = SHAPES["decode_32k"]
+    specs = input_specs(cfg, shape)
+    csh = sh.cache_shardings(mesh, specs["cache"], kv_policy="seq_model")
+    print(f"\n== decode_32k cache shardings (seq_model policy, §Perf) ==")
+    k_sh = csh["segments"][0]["k"]
+    print(f"  k/v pages: {specs['cache']['segments'][0]['k'].shape} "
+          f"-> {k_sh.spec}")
+    print(f"  lengths:   {specs['cache']['lengths'].shape} "
+          f"-> {csh['lengths'].spec}")
+    n = cfg.param_count() / 1e9
+    print(f"\n{args.arch}: {n:.1f}B params; per-chip share on this mesh "
+          f"~{n * 4 / 16:.2f} GB f32 (TP16)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: the PICE public API in ~60 lines.
+
+1. Build a tiny cloud LLM + two edge SLMs (pure JAX, runs on CPU).
+2. Profile them offline (f(l) latency models, cost coefficient c).
+3. Serve a query through the progressive-inference pipeline:
+   cloud sketch -> scheduler -> parallel edge expansion -> Eq.(3) ensemble.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.pice_cloud_edge import TINY_CLOUD, TINY_EDGE_A, TINY_EDGE_B
+from repro.core.profiler import cost_coefficient, profile_engine
+from repro.core.progressive import PICEConfig, PICEPipeline
+from repro.core.scheduler import EdgeModelInfo
+from repro.models import transformer
+from repro.serving.engine import InferenceEngine
+from repro.serving.requests import Request
+
+
+def main():
+    # --- 1. models & engines -------------------------------------------------
+    engines = {}
+    for cfg, seed in ((TINY_CLOUD, 0), (TINY_EDGE_A, 1), (TINY_EDGE_B, 2)):
+        params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+        engines[cfg.name] = InferenceEngine(cfg, params, max_batch=8,
+                                            max_len=512, name=cfg.name)
+        n = sum(x.size for x in jax.tree.leaves(params))
+        print(f"built {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+              f"({n/1e6:.1f}M params)")
+
+    # --- 2. offline profiling (paper §III Profiler) --------------------------
+    lm_cloud = profile_engine(engines["tiny-cloud"], lengths=(8, 16, 32))
+    infos = []
+    for name, cap in (("tiny-edge-a", 0.7), ("tiny-edge-b", 0.55)):
+        lm = profile_engine(engines[name], lengths=(8, 16, 32))
+        print(f"{name}: rate={lm.rate:.1f} tok/s, "
+              f"c={cost_coefficient(lm_cloud, lm):.2f}")
+        infos.append(EdgeModelInfo(name=name, latency=lm, capability=cap))
+
+    # --- 3. progressive inference --------------------------------------------
+    pipe = PICEPipeline(
+        cloud_engine=engines["tiny-cloud"],
+        edge_engines={n: engines[n] for n in ("tiny-edge-a", "tiny-edge-b")},
+        cloud_latency=lm_cloud, edge_infos=infos,
+        cfg=PICEConfig(ensemble_size=2))
+
+    resp = pipe.handle(Request(
+        query="explain how the system stores tokens works",
+        category="generic"))
+    print(f"\nmode={resp.mode}  cloud_tokens={resp.cloud_tokens}  "
+          f"edge_tokens={resp.edge_tokens}  latency={resp.latency_s:.2f}s")
+    print(f"response: {resp.text[:120]!r}")
+    print("\n(untrained weights -> gibberish text; see "
+          "examples/progressive_serving.py for the trained end-to-end demo)")
+
+
+if __name__ == "__main__":
+    main()

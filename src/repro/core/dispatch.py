@@ -1,0 +1,53 @@
+"""Job dispatching (paper Algorithm 1): multi-list scheduling.
+
+Tasks are bucketed into lists by expected answer length l_i; an idle edge
+device pulls a batch from the list with the most jobs. Batching
+uniform-length tasks avoids short sequences waiting on long ones (the
+quadratic-cost padding waste the paper calls out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.serving.requests import SketchTask
+
+
+@dataclasses.dataclass
+class MultiListQueue:
+    """Lists q_1..q_n bucketed by expected length."""
+    boundaries: Sequence[int] = (64, 128, 256, 512, 1024)
+    max_size: int = 64
+
+    def __post_init__(self):
+        self.lists: List[List[SketchTask]] = [[] for _ in
+                                              range(len(self.boundaries) + 1)]
+
+    def _index(self, l: int) -> int:
+        for j, b in enumerate(self.boundaries):
+            if l <= b:
+                return j
+        return len(self.boundaries)
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self.lists)
+
+    @property
+    def full(self) -> bool:
+        return len(self) >= self.max_size
+
+    def push(self, task: SketchTask) -> None:
+        # Lines 3-6: determine list index by l_i, append
+        self.lists[self._index(task.expected_length)].append(task)
+
+    def pull_batch(self, batch_size: int) -> List[SketchTask]:
+        """Lines 7-11: pull a batch from the longest list (FIFO within it)."""
+        if not len(self):
+            return []
+        jmax = max(range(len(self.lists)), key=lambda j: len(self.lists[j]))
+        q = self.lists[jmax]
+        batch, self.lists[jmax] = q[:batch_size], q[batch_size:]
+        return batch
+
+    def peek_expected_tokens(self) -> float:
+        return float(sum(t.expected_length for q in self.lists for t in q))

@@ -1,0 +1,175 @@
+"""The PICE progressive-inference orchestrator (paper Fig. 4 workflow).
+
+Real-compute mode: drives actual InferenceEngine instances (cloud LLM + edge
+SLM fleet) through the full pipeline —
+  (1) cloud assesses expected response length l_i,
+  (2a) short answer -> full cloud response, or
+  (2b) cloud emits a sketch at the scheduler-chosen level,
+  (3) the dispatcher queues the expansion task; the execution optimizer plans
+      the parallel sentence groups (binary-tree merge),
+  (4) edge SLMs expand groups in parallel; the ensemble picks the most
+      confident expansion per group,
+  (5) the stitched response returns to the user.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.core import ensemble as ens
+from repro.core import exec_optimizer, sketch as sketch_lib
+from repro.core.dispatch import MultiListQueue
+from repro.core.profiler import LatencyModel, RuntimeMonitor
+from repro.core.scheduler import DynamicScheduler, EdgeModelInfo, ScheduleDecision
+from repro.core.selection import select_model
+from repro.data import tokenizer as tok
+from repro.serving.engine import InferenceEngine
+from repro.serving.network import NetworkModel
+from repro.serving.requests import Request, Response, SketchTask
+
+
+@dataclasses.dataclass
+class PICEConfig:
+    alpha1: float = 0.4            # Eq.(3) perplexity weight
+    alpha2: float = 0.2            # Eq.(3) length weight
+    max_sketch_tokens: int = 160
+    short_answer_tokens: int = 48  # below this, always answer from cloud
+    queue_max: int = 8
+    max_parallelism: int = 8
+    ensemble_size: int = 2         # how many edge models expand each group
+
+
+class PICEPipeline:
+    def __init__(self, cloud_engine: InferenceEngine,
+                 edge_engines: Dict[str, InferenceEngine],
+                 cloud_latency: LatencyModel,
+                 edge_infos: List[EdgeModelInfo],
+                 network: Optional[NetworkModel] = None,
+                 cfg: PICEConfig = PICEConfig(),
+                 n_edge_devices: Optional[int] = None):
+        self.cloud = cloud_engine
+        self.edges = edge_engines
+        self.cfg = cfg
+        self.network = network or NetworkModel()
+        self.monitor = RuntimeMonitor()
+        self.queue = MultiListQueue(max_size=cfg.queue_max)
+        self.edge_infos = sorted(edge_infos, key=lambda e: e.capability)
+        self.scheduler = DynamicScheduler(
+            cloud_latency, self.edge_infos, self.network,
+            n_edge_devices or len(edge_engines), monitor=self.monitor,
+            queue_max=cfg.queue_max)
+        self.stats = {"progressive": 0, "cloud_full": 0}
+
+    # ------------------------------------------------------------------
+    def predict_length(self, req: Request) -> int:
+        return sketch_lib.heuristic_expected_length(req.query, req.category)
+
+    def _cloud_generate(self, prompt: str, max_new: int):
+        toks = tok.encode(prompt)
+        (out, lps), = self.cloud.generate([toks], max_new=max_new)
+        return tok.decode(out), out, lps
+
+    # ------------------------------------------------------------------
+    def handle(self, req: Request) -> Response:
+        t_start = time.perf_counter()
+        l_i = min(self.predict_length(req), req.max_new_tokens)
+
+        # short answers: no progressive inference (workflow step 2a)
+        if l_i <= self.cfg.short_answer_tokens:
+            decision = ScheduleDecision(mode="cloud_full")
+        else:
+            decision = self.scheduler.schedule(l_i, sla=req.sla)
+
+        if decision.mode == "cloud_full":
+            self.stats["cloud_full"] += 1
+            text, out, _ = self._cloud_generate(
+                sketch_lib.cloud_full_prompt(req.query), max_new=l_i)
+            return Response(req_id=req.req_id, text=text.strip(),
+                            mode="cloud_full", cloud_tokens=len(out),
+                            latency_s=time.perf_counter() - t_start,
+                            model_used=self.cloud.name)
+
+        # ---- progressive path (2b..5) -----------------------------------
+        self.stats["progressive"] += 1
+        sketch_text, sk_toks, _ = self._cloud_generate(
+            sketch_lib.cloud_sketch_prompt(req.query, decision.sketch_tokens),
+            max_new=min(decision.sketch_tokens + 10, self.cfg.max_sketch_tokens))
+        sketch_text = sketch_text.strip()
+        sentences = sketch_lib.segment_sketch(sketch_text)
+        if not sentences:
+            sentences = [sketch_text or req.query]
+
+        task = SketchTask(req_id=req.req_id, query=req.query,
+                          sketch=sketch_text, sentences=sentences,
+                          expected_length=l_i, sketch_tokens=len(sk_toks))
+        self.queue.push(task)
+        self.monitor.on_enqueue(l_i)
+        net_delay = self.network.delay_s(task.sketch_tokens)
+
+        # Algorithm 2: (re)select the SLM against the remaining budget
+        sel = select_model(decision.edge_model, self.edge_infos, l_i,
+                           task.sketch_tokens, self.scheduler.cloud,
+                           queue_len=len(self.queue),
+                           queue_max=self.cfg.queue_max)
+        primary = sel.model
+
+        # execution optimizer: binary-tree merge plan
+        einfo = next(e for e in self.edge_infos if e.name == primary)
+        budget = self.scheduler.cloud.f(l_i) - self.scheduler.cloud.f(
+            task.sketch_tokens)
+
+        def lat(p, longest_tokens):
+            return einfo.latency.f(longest_tokens)
+
+        plan = exec_optimizer.plan_expansion(
+            sentences, lat, budget,
+            max_parallelism=self.cfg.max_parallelism)
+
+        # pull the task (single-node real-compute: the queue round-trips)
+        self.queue.pull_batch(1)
+        self.monitor.on_dequeue(l_i)
+
+        # expand groups on the ensemble of edge engines
+        names = self._ensemble_names(primary)
+        per_tok = max(len(tok.encode(" ".join(g))) for g in plan.groups)
+        max_new = min(int(per_tok * 3.5) + 24, req.max_new_tokens)
+        group_prompts = [sketch_lib.edge_expand_prompt(req.query, sketch_text, g)
+                         for g in plan.groups]
+        chosen: List[str] = []
+        total_conf, edge_tokens = 0.0, 0
+        group_results = {}
+        for name in names:
+            eng = self.edges[name]
+            prompts = [tok.encode(p) for p in group_prompts]
+            outs = eng.generate(prompts, max_new=max_new)
+            group_results[name] = outs
+        for gi in range(len(plan.groups)):
+            cands = []
+            for name in names:
+                out, lps = group_results[name][gi]
+                cands.append(ens.Candidate(
+                    text=tok.decode(out).strip(),
+                    mean_log2_prob=ens.mean_log2_from_nats(lps),
+                    n_tokens=len(out), model=name))
+            best, scores = ens.select_best(cands, sketch_text,
+                                           self.cfg.alpha1, self.cfg.alpha2)
+            chosen.append(best.text)
+            total_conf += max(scores)
+            edge_tokens += best.n_tokens
+        text = " ".join(chosen).strip()
+        return Response(req_id=req.req_id, text=text, mode="progressive",
+                        cloud_tokens=len(sk_toks), edge_tokens=edge_tokens,
+                        latency_s=time.perf_counter() - t_start + net_delay,
+                        network_s=net_delay,
+                        confidence=total_conf / max(len(plan.groups), 1),
+                        model_used=primary)
+
+    def _ensemble_names(self, primary: str) -> List[str]:
+        names = [primary]
+        for e in reversed(self.edge_infos):         # most capable first
+            if e.name != primary and e.name in self.edges:
+                names.append(e.name)
+            if len(names) >= self.cfg.ensemble_size:
+                break
+        return [n for n in names if n in self.edges]

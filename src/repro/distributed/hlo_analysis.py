@@ -1,0 +1,55 @@
+"""Parse compiled HLO text for roofline inputs.
+
+`compiled.cost_analysis()` supplies FLOPs and bytes-accessed, but NOT
+collective traffic — we recover it by summing the output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute op
+in the post-SPMD optimized HLO (`compiled.as_text()`).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %ag = bf16[2,16,4096]{2,1,0} all-gather(...)
+#        ROOT %tuple ... (f32[8,128], bf16[4,4]) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>" + "|".join(COLLECTIVES) + r")\b")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind. Returns {kind: bytes, 'total': ...}."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op")
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(m.group("shapes")):
+            if dt in _DTYPE_BYTES:
+                total += _shape_bytes(dt, dims)
+        out[op] += total
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def collective_count(hlo_text: str) -> int:
+    return sum(collective_bytes(hlo_text)["counts"].values())

@@ -1,0 +1,128 @@
+"""Roofline-term derivation from dry-run artifacts.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. cost_analysis() numbers come from the post-SPMD
+per-device module, so terms are per-chip:
+
+    compute    = HLO_FLOPs_dev / peak
+    memory     = HLO_bytes_dev / hbm_bw
+    collective = collective_bytes_dev / ici_bw
+
+MODEL_FLOPS is the analytic useful compute: 6*N*D for training (fwd+bwd),
+2*N*D for forward-only (prefill/decode), with N = active params for MoE.
+The ratio MODEL_FLOPS/HLO_FLOPs exposes remat/dispatch/redundancy waste —
+and for architectures whose inner loops lower to lax.scan/lax.map (SSD chunk
+scans, sLSTM time scans, q-blocked long attention), XLA's static cost
+analysis counts the loop body ONCE, so HLO_FLOPs underestimates and the
+ratio exceeds 1; those rows are flagged `scan_undercount`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.configs.registry import SHAPES, InputShape, get_config
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Analytic useful FLOPs for the whole step (global, all chips)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def has_inner_scan(cfg: ModelConfig, shape: InputShape) -> bool:
+    if cfg.family in ("ssm", "hybrid"):
+        return True                      # SSD chunk scan / sLSTM time scan
+    if shape.kind in ("train", "prefill") and shape.seq_len >= 4096:
+        return True                      # q-blocked attention lax.map
+    return False
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    hlo_flops_dev: float = 0.0
+    useful_ratio: float = 0.0
+    temp_bytes: Optional[int] = None
+    scan_undercount: bool = False
+    note: str = ""
+
+    def dominant_value(self) -> float:
+        return {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}[self.dominant]
+
+
+def row_from_record(rec: dict) -> RooflineRow:
+    arch, shape_name, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    if rec["status"] != "ok":
+        return RooflineRow(arch=arch, shape=shape_name, mesh=mesh,
+                           status=rec["status"],
+                           note=rec.get("reason", rec.get("error", ""))[:120])
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    chips = CHIPS[mesh]
+    compute = rec["flops"] / PEAK_FLOPS
+    memory = rec["bytes_accessed"] / HBM_BW
+    coll = rec["collective_bytes"]["total"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = rec["flops"] * chips
+    return RooflineRow(
+        arch=arch, shape=shape_name, mesh=mesh, status="ok",
+        compute_s=compute, memory_s=memory, collective_s=coll, dominant=dom,
+        model_flops=mf, hlo_flops_dev=rec["flops"],
+        useful_ratio=mf / max(hlo_flops_global, 1.0),
+        temp_bytes=rec["memory"]["temp_bytes"],
+        scan_undercount=has_inner_scan(cfg, shape),
+    )
+
+
+def load_rows(art_dir: str, mesh: str = "pod16x16", tag: str = "") -> list:
+    rows = []
+    for f in sorted(Path(art_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("mesh") != mesh or rec.get("tag", "") != tag:
+            continue
+        rows.append(row_from_record(rec))
+    return rows
+
+
+def suggestion(row: RooflineRow) -> str:
+    """One sentence on what would move the dominant term down."""
+    if row.status != "ok":
+        return ""
+    if row.dominant == "collective":
+        return ("reduce resharding: align producer shardings with cache/param "
+                "layouts, or swap TP for sequence-parallel collectives")
+    if row.dominant == "memory":
+        if row.shape.startswith("decode") or row.shape == "long_500k":
+            return ("decode is KV-bound: shorter outputs (PICE sketching), "
+                    "windowed/quantized KV, or more model-axis cache sharding")
+        return ("cast/fuse activations (bf16 residuals, fused norm), tighter "
+                "remat policy, or shard the residual stream")
+    return ("raise MXU utilization: bigger per-chip tiles, fewer pad-waste "
+            "dims, fused matmuls")

@@ -1,0 +1,80 @@
+"""Divisibility-aware sharding helpers.
+
+Every sharding decision in the framework goes through these helpers so that a
+tensor dim is only sharded over a mesh axis (or axis tuple) when the size is
+divisible — otherwise that dim is replicated. This makes every (architecture x
+input-shape x mesh) combination lower without per-arch special cases (e.g.
+qwen2-1.5b has 2 KV heads, which cannot split over a 16-way model axis, so its
+KV projections replicate over `model` while Q still shards).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+
+def axis_size(mesh: Mesh, axis: AxisName) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a]
+    return n
+
+
+def shardable(mesh: Mesh, dim: int, axis: AxisName) -> AxisName:
+    """Return `axis` if `dim` divides over it, else None (replicate)."""
+    if axis is None:
+        return None
+    n = axis_size(mesh, axis)
+    if n > 0 and dim % n == 0 and dim >= n:
+        return axis
+    # try prefixes of a tuple axis, e.g. ("data","model") -> ("data",)
+    if isinstance(axis, tuple):
+        for k in range(len(axis) - 1, 0, -1):
+            sub = axis[:k]
+            if dim % axis_size(mesh, sub) == 0 and dim >= axis_size(mesh, sub):
+                return sub
+    return None
+
+
+def pspec(mesh: Mesh, shape: Sequence[int], axes: Sequence[AxisName]) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide the dims."""
+    assert len(shape) == len(axes), (shape, axes)
+    return P(*[shardable(mesh, d, a) for d, a in zip(shape, axes)])
+
+
+def named(mesh: Mesh, shape: Sequence[int], axes: Sequence[AxisName]) -> NamedSharding:
+    return NamedSharding(mesh, pspec(mesh, shape, axes))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes used for the batch dimension ('pod' + 'data' if present)."""
+    names = mesh.axis_names
+    out = tuple(a for a in ("pod", "data") if a in names)
+    return out or (names[0],)
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def constraint(x, mesh: Mesh, axes: Sequence[AxisName]):
+    """with_sharding_constraint with divisibility-aware spec."""
+    spec = pspec(mesh, x.shape, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(mesh: Mesh, tree, spec_fn):
+    """Map a spec_fn(path, leaf) -> PartitionSpec over a pytree into shardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append(NamedSharding(mesh, spec_fn(path, leaf)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,85 @@
+"""Reward model (paper §IV-D step 2): scalar sketch-preference scorer trained
+with the Bradley-Terry pairwise loss
+
+    L_R(phi) = -E_{(x, r_w, r_l)} [ log sigmoid( R(x, r_w) - R(x, r_l) ) ].
+
+R is a small transformer with a mean-pooled scalar head over 'x | r'.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokenizer as tok
+from repro.finetune.preference import PreferenceTriple
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.training import optimizer as opt_lib
+
+
+def init_reward_model(cfg: ModelConfig, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    params = transformer.init_params(cfg, key)
+    params["reward_head"] = dense_init(jax.random.fold_in(key, 1),
+                                       (cfg.d_model, 1))
+    return params
+
+
+def reward_fwd(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) -> scalar reward (B,)."""
+    _, _, hidden = transformer.forward(cfg, params, tokens, return_hidden=True)
+    mask = (tokens != tok.EOS).astype(jnp.float32)[..., None]
+    pooled = jnp.sum(hidden.astype(jnp.float32) * mask, axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1), 1.0)
+    return (pooled @ params["reward_head"].astype(jnp.float32))[:, 0]
+
+
+def encode_pair(x: str, r: str, seq_len: int) -> np.ndarray:
+    ids = tok.encode(x)[: seq_len // 2] + [ord("|")] + tok.encode(r)
+    ids = ids[:seq_len]
+    out = np.zeros((seq_len,), np.int32)
+    out[: len(ids)] = ids
+    return out
+
+
+def bt_loss(cfg: ModelConfig, params: dict, tok_w: jax.Array,
+            tok_l: jax.Array) -> jax.Array:
+    rw = reward_fwd(cfg, params, tok_w)
+    rl = reward_fwd(cfg, params, tok_l)
+    return -jnp.mean(jax.nn.log_sigmoid(rw - rl)), jnp.mean(
+        (rw > rl).astype(jnp.float32))
+
+
+def train_reward_model(cfg: ModelConfig, triples: Sequence[PreferenceTriple],
+                       n_steps: int = 150, batch: int = 8, seq_len: int = 160,
+                       lr: float = 1e-3, seed: int = 0, log_fn=print):
+    params = init_reward_model(cfg, seed)
+    opt_cfg = opt_lib.AdamWConfig(lr=lr, warmup_steps=10, total_steps=n_steps)
+    opt_state = opt_lib.init_opt_state(params)
+    rng = np.random.default_rng(seed)
+
+    tw = np.stack([encode_pair(t.x, t.r_w, seq_len) for t in triples])
+    tl = np.stack([encode_pair(t.x, t.r_l, seq_len) for t in triples])
+
+    @jax.jit
+    def step(params, opt_state, bw, bl):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: bt_loss(cfg, p, bw, bl), has_aux=True)(params)
+        params, opt_state, _ = opt_lib.adamw_update(opt_cfg, params, grads,
+                                                    opt_state)
+        return params, opt_state, loss, acc
+
+    for i in range(n_steps):
+        idx = rng.integers(0, len(triples), batch)
+        params, opt_state, loss, acc = step(params, opt_state,
+                                            jnp.asarray(tw[idx]),
+                                            jnp.asarray(tl[idx]))
+        if (i + 1) % 25 == 0 or i == n_steps - 1:
+            log_fn(f"RM step {i+1}: loss={float(loss):.4f} "
+                   f"pair_acc={float(acc):.3f}")
+    return params

@@ -1,0 +1,114 @@
+"""RL fine-tuning from AI feedback (paper §IV-D step 3).
+
+Policy pi_theta initialized from the SFT model, optimized for
+
+    J(theta) = E_{r ~ pi_theta(.|x)} [ (1 - gamma) R_phi(r|x)
+                                       - gamma D_KL(pi_theta || pi_SFT) ]
+
+via REINFORCE with a moving-average baseline; the KL term is estimated
+token-wise on sampled sketches (log pi_theta - log pi_SFT).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import corpus as corpus_lib
+from repro.data import tokenizer as tok
+from repro.finetune.reward_model import encode_pair, reward_fwd
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serving.engine import InferenceEngine
+from repro.serving.sampler import SamplerConfig
+from repro.training import optimizer as opt_lib
+
+
+@dataclasses.dataclass
+class RLAIFConfig:
+    gamma: float = 0.2             # KL weight
+    lr: float = 3e-4
+    n_steps: int = 60
+    batch: int = 4
+    max_sketch_tokens: int = 64
+    seq_len: int = 160
+    seed: int = 0
+
+
+def _seq_logprob(cfg: ModelConfig, params, prompt_ids, gen_ids):
+    """Differentiable sum log pi(gen | prompt); returns (sum_lp, per_token)."""
+    full = jnp.concatenate([prompt_ids, gen_ids])
+    logits, _ = transformer.forward(cfg, params, full[None, :-1])
+    logp = jax.nn.log_softmax(logits[0].astype(jnp.float32), axis=-1)
+    targets = full[1:]
+    lp = jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+    gen_lp = lp[prompt_ids.shape[0] - 1:]
+    return jnp.sum(gen_lp), gen_lp
+
+
+def run_rlaif(policy_cfg: ModelConfig, policy_params,
+              sft_params, rm_cfg: ModelConfig, rm_params,
+              cfg: RLAIFConfig = RLAIFConfig(), log_fn=print):
+    """Returns fine-tuned policy params."""
+    rng = np.random.default_rng(cfg.seed)
+    examples = corpus_lib.corpus(512, cfg.seed)
+    opt_cfg = opt_lib.AdamWConfig(lr=cfg.lr, warmup_steps=5,
+                                  total_steps=cfg.n_steps, grad_clip=1.0)
+    opt_state = opt_lib.init_opt_state(policy_params)
+    baseline = 0.0
+
+    def loss_fn(params, prompt_ids, gen_ids, advantage, ref_lp):
+        sum_lp, gen_lp = _seq_logprob(policy_cfg, params, prompt_ids, gen_ids)
+        kl = jnp.mean(gen_lp - ref_lp)          # E[log pi - log pi_sft]
+        pg = -advantage * sum_lp / jnp.maximum(gen_ids.shape[0], 1)
+        return pg + cfg.gamma * kl, (kl, sum_lp)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+    update = jax.jit(lambda p, g, o: opt_lib.adamw_update(opt_cfg, p, g, o))
+    rm_reward = jax.jit(lambda toks: reward_fwd(rm_cfg, rm_params, toks))
+    ref_lp_fn = jax.jit(
+        lambda pids, gids: _seq_logprob(policy_cfg, sft_params, pids, gids)[1])
+
+    # one engine, params swapped per step (sampling is non-differentiable;
+    # rebuilding the engine would re-jit its decode/prefill closures)
+    engine = InferenceEngine(policy_cfg, policy_params, max_batch=cfg.batch,
+                             max_len=512,
+                             sampler=SamplerConfig(temperature=0.9, top_k=40))
+    history = []
+    for step in range(cfg.n_steps):
+        engine.params = policy_params
+        idx = rng.integers(0, len(examples), cfg.batch)
+        prompts, gens, rewards = [], [], []
+        for i in idx:
+            ex = examples[i]
+            prompt = tok.encode(f"A: {ex.answer[:200]}\nS:")
+            (out, _), = engine.generate([prompt], max_new=cfg.max_sketch_tokens)
+            sketch = tok.decode(out)
+            r_in = encode_pair(ex.answer[:200], sketch, cfg.seq_len)
+            rewards.append(float(rm_reward(jnp.asarray(r_in[None]))[0]))
+            prompts.append(np.asarray(prompt, np.int32))
+            gens.append(np.asarray(out if out else [tok.EOS], np.int32))
+        mean_r = float(np.mean(rewards))
+        baseline = 0.9 * baseline + 0.1 * mean_r if step else mean_r
+        kls = []
+        grads_acc = None
+        for p_ids, g_ids, r in zip(prompts, gens, rewards):
+            p_j, g_j = jnp.asarray(p_ids), jnp.asarray(g_ids)
+            ref_lp = ref_lp_fn(p_j, g_j)
+            adv = (1.0 - cfg.gamma) * (r - baseline)
+            (loss, (kl, _)), grads = grad_fn(policy_params, p_j, g_j,
+                                             jnp.asarray(adv), ref_lp)
+            kls.append(float(kl))
+            grads_acc = grads if grads_acc is None else jax.tree.map(
+                jnp.add, grads_acc, grads)
+        grads_acc = jax.tree.map(lambda g: g / cfg.batch, grads_acc)
+        policy_params, opt_state, _ = update(policy_params, grads_acc, opt_state)
+        history.append({"step": step, "mean_reward": mean_r,
+                        "kl": float(np.mean(kls))})
+        if (step + 1) % 10 == 0 or step == cfg.n_steps - 1:
+            log_fn(f"RLAIF step {step+1}: reward={mean_r:.4f} "
+                   f"kl={np.mean(kls):.4f}")
+    return policy_params, history

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: (B,1,Hq,hd); k/v_cache: (B,S,Hkv,hd); lengths: (B,) valid entries.
+
+    Attends the single new query against cache positions [0, lengths).
+    Returns (B,1,Hq,hd).
+    """
+    B, _, Hq, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = Hq // Hkv
+    k = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
+    v = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale          # (B,Hq,1,S)
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)

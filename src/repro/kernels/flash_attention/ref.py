@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for causal (optionally sliding-window) GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(q, k, v, causal: bool = True, window: int = 0, softcap: float = 0.0):
+    """q: (B,S,Hq,hd), k/v: (B,S,Hkv,hd) -> (B,S,Hq,hd)."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = ki <= qi
+    if window:
+        mask = mask & (ki > qi - window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)

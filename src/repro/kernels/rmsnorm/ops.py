@@ -1,0 +1,15 @@
+"""Jitted public wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm import kernel as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = True):
+    return _kernel.rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
+                                  interpret=interpret)

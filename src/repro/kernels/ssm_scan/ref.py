@@ -1,0 +1,99 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan.
+
+Recurrence (per batch b, head h):
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t (outer) x_t
+    y_t = C_t^T h_t
+with h in R^{P x N} (head_dim x state), B/C shared across heads (n_groups=1).
+
+Two references:
+  ssd_sequential_ref — literal per-token scan (ground truth for tests)
+  ssd_chunked_ref    — chunked parallel form (used by the models; also the
+                       oracle for the Pallas kernel)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(x, dt, A, B, C, initial_state=None):
+    """x: (Bb,S,H,P), dt: (Bb,S,H), A: (H,), B/C: (Bb,S,N).
+
+    Returns y (Bb,S,H,P), final_state (Bb,H,P,N). All math in f32.
+    """
+    Bb, S, H, P = x.shape
+    N = B.shape[-1]
+    x, dt, B, C = (a.astype(jnp.float32) for a in (x, dt, B, C))
+    A = A.astype(jnp.float32)
+    h0 = (jnp.zeros((Bb, H, P, N), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp            # (Bb,H,P), (Bb,H), (Bb,N), (Bb,N)
+        decay = jnp.exp(dt_t * A[None])      # (Bb,H)
+        upd = (dt_t[..., None] * x_t)[..., None] * B_t[:, None, None, :]
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hf
+
+
+def ssd_chunked_ref(x, dt, A, B, C, chunk: int = 128, initial_state=None):
+    """Chunked-parallel SSD. Same signature/semantics as ssd_sequential_ref."""
+    Bb, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+    x, dt, B, C = (a.astype(jnp.float32) for a in (x, dt, B, C))
+    A = A.astype(jnp.float32)
+
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = B.reshape(Bb, nc, Q, N)
+    Cc = C.reshape(Bb, nc, Q, N)
+
+    dA = dtc * A[None, None, None, :]                  # (Bb,nc,Q,H) log-decays
+    ca = jnp.cumsum(dA, axis=2)                        # inclusive cumsum
+    ca_end = ca[:, :, -1:]                             # (Bb,nc,1,H)
+
+    # intra-chunk: y[t] = sum_{s<=t} exp(ca_t - ca_s) dt_s (C_t.B_s) x_s
+    decay = ca[:, :, :, None, :] - ca[:, :, None, :, :]      # (Bb,nc,Q,Q,H) t,s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, -jnp.inf)
+    L = jnp.exp(decay)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)               # (Bb,nc,Q,Q)
+    w = cb[..., None] * L * dtc[:, :, None, :, :]            # (Bb,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", w, xc)
+
+    # chunk state contributions: G_c = sum_s exp(ca_end - ca_s) dt_s B_s (x) x_s
+    kdecay = jnp.exp(ca_end - ca) * dtc                      # (Bb,nc,Q,H)
+    G = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", kdecay, Bc, xc)  # (Bb,nc,H,P,N)
+
+    # inter-chunk scan of states
+    h0 = (jnp.zeros((Bb, H, P, N), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+    chunk_decay = jnp.exp(ca_end[:, :, 0])                   # (Bb,nc,H)
+
+    def step(h, inp):
+        G_c, dec_c = inp                                     # (Bb,H,P,N), (Bb,H)
+        h_new = h * dec_c[..., None, None] + G_c
+        return h_new, h                                      # emit state BEFORE chunk
+
+    xs = (jnp.moveaxis(G, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    hf, h_prevs = jax.lax.scan(step, h0, xs)                 # h_prevs (nc,Bb,H,P,N)
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)                     # (Bb,nc,H,P,N)
+
+    # state contribution within chunk: y_state[t] = exp(ca_t) C_t . h_prev
+    qdecay = jnp.exp(ca)                                     # (Bb,nc,Q,H)
+    y_state = jnp.einsum("bcqn,bchpn->bcqhp", Cc, h_prev) * qdecay[..., None]
+
+    y = (y_intra + y_state).reshape(Bb, S, H, P)
+    return y, hf

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape), lower + compile the step function on
+the production mesh (single-pod 16x16 = 256 chips, and multi-pod 2x16x16 =
+512 chips), print memory_analysis() (fits?) and cost_analysis() (FLOPs/bytes
+for the roofline), and parse collective traffic out of the optimized HLO.
+
+NOTE: the 512-placeholder-device XLA flag above MUST precede every other
+import (jax locks the device count at first init). Smoke tests and benches
+run in separate processes and see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.registry import SHAPES, adapt_for_shape, input_specs, shape_supported
+from repro.distributed import hlo_analysis
+from repro.launch import shardings as sh_lib
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.training import optimizer as opt_lib
+
+
+def _dryrun_config(cfg, shape):
+    """Dry-run adaptations (documented in DESIGN.md / EXPERIMENTS.md):
+    - unroll the layer stack so XLA cost analysis counts every layer;
+    - chunk=64 for big-head SSDs keeps the intra-chunk decay tensor bounded.
+    """
+    cfg = adapt_for_shape(cfg, shape)
+    over = {"scan_layers": False, "use_pallas": False}
+    if cfg.family in ("ssm", "hybrid") and shape.seq_len >= 4096:
+        over["ssm_chunk"] = 64
+    return cfg.with_(**over)
+
+
+def build_step(cfg, shape, mesh, fsdp: bool = False, kv_hd_shard: bool = False,
+               kv_policy: str = "hd_model"):
+    moe_ep = cfg.moe_ep
+    """Returns (fn, arg_specs tuple, in_shardings, out_shardings, donate)."""
+    specs = input_specs(cfg, SHAPES[shape.name] if isinstance(shape, str) else shape)
+    params_shape = jax.eval_shape(lambda k: transformer.init_params(cfg, k),
+                                  jax.ShapeDtypeStruct((2,), jnp.uint32))
+    psh = sh_lib.param_shardings(cfg, mesh, params_shape, fsdp=fsdp,
+                                 kv_hd_shard=kv_hd_shard, moe_ep=moe_ep)
+
+    if shape.kind == "train":
+        opt_cfg = opt_lib.AdamWConfig()
+        opt_shape = jax.eval_shape(opt_lib.init_opt_state, params_shape)
+        osh = jax.tree.map(
+            lambda s: s, opt_lib.OptState(
+                step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                mu=sh_lib.param_shardings(cfg, mesh, opt_shape.mu, fsdp=fsdp,
+                                          kv_hd_shard=kv_hd_shard,
+                                          moe_ep=moe_ep),
+                nu=sh_lib.param_shardings(cfg, mesh, opt_shape.nu, fsdp=fsdp,
+                                          kv_hd_shard=kv_hd_shard,
+                                          moe_ep=moe_ep)))
+        batch = {k: v for k, v in specs.items()}
+        bsh = sh_lib.input_shardings(mesh, batch)
+        fn = steps_lib.make_train_step(cfg, opt_cfg, mesh=mesh)
+        return (fn, (params_shape, opt_shape, batch), (psh, osh, bsh),
+                (psh, osh, None), (0, 1))
+
+    if shape.kind == "prefill":
+        cache = specs["cache"]
+        csh = sh_lib.cache_shardings(mesh, cache, kv_policy=kv_policy)
+        args = [params_shape, specs["tokens"], cache, specs["prompt_lengths"]]
+        ash = [psh, sh_lib.input_shardings(mesh, {"t": specs["tokens"]})["t"],
+               csh, sh_lib.input_shardings(mesh, {"l": specs["prompt_lengths"]})["l"]]
+        extras, esh = [], []
+        for key in ("enc_frames", "prefix_embeds"):
+            if key in specs:
+                extras.append(specs[key])
+                esh.append(sh_lib.input_shardings(mesh, {key: specs[key]})[key])
+            else:
+                extras.append(None)
+                esh.append(None)
+        base = steps_lib.make_prefill_step(cfg, mesh=mesh)
+
+        def fn(params, tokens, cache, plens, enc_frames, prefix_embeds):
+            return base(params, tokens, cache, prompt_lengths=plens,
+                        enc_frames=enc_frames, prefix_embeds=prefix_embeds)
+
+        return (fn, tuple(args + extras), tuple(ash + esh),
+                (None, csh), (2,))
+
+    # decode
+    cache = specs["cache"]
+    csh = sh_lib.cache_shardings(mesh, cache, kv_policy=kv_policy)
+    tsh = sh_lib.input_shardings(mesh, {"t": specs["tokens"]})["t"]
+    fn = steps_lib.make_decode_step(cfg, mesh=mesh)
+    return (fn, (params_shape, specs["tokens"], cache), (psh, tsh, csh),
+            (None, csh), (2,))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+            fsdp: bool = False, act_shard: str = None, tag: str = "",
+            moe_sort: bool = False, kv_hd_shard: bool = False,
+            chunked_ce: int = 0, kv_policy: str = "hd_model",
+            moe_ep: bool = False, cast_once: bool = False) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = registry.get_config(arch)
+    skip = shape_supported(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "fsdp": fsdp, "tag": tag}
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        if out_dir:
+            out_dir.mkdir(parents=True, exist_ok=True)
+            suffix = f"__{tag}" if tag else ""
+            fname = (f"{arch.replace('.', 'p')}__{shape_name}__{mesh_name}"
+                     f"{suffix}.json")
+            (out_dir / fname).write_text(json.dumps(rec, indent=1))
+        return rec
+    cfg = _dryrun_config(cfg, shape)
+    if act_shard:
+        cfg = cfg.with_(act_shard=act_shard)
+    if moe_sort:
+        cfg = cfg.with_(moe_sort_dispatch=True)
+    if moe_ep:
+        cfg = cfg.with_(moe_ep=True)
+    if cast_once:
+        cfg = cfg.with_(cast_params_once=True)
+    if chunked_ce:
+        from repro.training import losses as losses_lib
+        losses_lib.CHUNKED_CE_BLOCK = chunked_ce
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, donate = build_step(cfg, shape, mesh,
+                                                     fsdp=fsdp,
+                                                     kv_hd_shard=kv_hd_shard,
+                                                     kv_policy=kv_policy)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = hlo_analysis.collective_bytes(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            flops=float(cost.get("flops", 0.0)),
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+            collective_bytes={k: int(v) for k, v in coll.items()
+                              if k != "counts"},
+            collective_counts=coll["counts"],
+            memory={
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            hlo_bytes=len(hlo),
+        )
+        print(f"[OK] {arch} x {shape_name} on {mesh_name}: "
+              f"flops/dev={rec['flops']:.3e} bytes/dev={rec['bytes_accessed']:.3e} "
+              f"coll={rec['collective_bytes']['total']:.3e}B "
+              f"temp={rec['memory']['temp_bytes']} "
+              f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+        del compiled, lowered, jitted
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[FAIL] {arch} x {shape_name} on {mesh_name}: {rec['error']}")
+    finally:
+        gc.collect()
+    if out_dir:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fname = f"{arch.replace('.', 'p')}__{shape_name}__{mesh_name}{suffix}.json"
+        (out_dir / fname).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--act-shard", default=None)
+    ap.add_argument("--moe-sort", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true")
+    ap.add_argument("--kv-hd-shard", action="store_true")
+    ap.add_argument("--kv-policy", default="hd_model",
+                    choices=["hd_model", "replicate", "seq_model"])
+    ap.add_argument("--chunked-ce", type=int, default=0)
+    ap.add_argument("--cast-once", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    pairs = []
+    if args.all:
+        for arch in registry.ALIASES:
+            for sname in SHAPES:
+                pairs.append((arch, sname))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        pairs = [(args.arch, args.shape)]
+
+    n_ok = n_fail = 0
+    for arch, sname in pairs:
+        mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+        suffix = f"__{args.tag}" if args.tag else ""
+        fname = f"{arch.replace('.', 'p')}__{sname}__{mesh_name}{suffix}.json"
+        if args.skip_existing and (out_dir / fname).exists():
+            prev = json.loads((out_dir / fname).read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[SKIP existing] {arch} x {sname}")
+                continue
+        rec = run_one(arch, sname, args.multi_pod, out_dir, fsdp=args.fsdp,
+                      act_shard=args.act_shard, tag=args.tag,
+                      moe_sort=args.moe_sort, kv_hd_shard=args.kv_hd_shard,
+                      chunked_ce=args.chunked_ce, kv_policy=args.kv_policy,
+                      moe_ep=args.moe_ep, cast_once=args.cast_once)
+        n_ok += rec["status"] in ("ok", "skipped")
+        n_fail += rec["status"] == "error"
+    print(f"dry-run sweep done: {n_ok} ok/skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

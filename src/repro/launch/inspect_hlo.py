@@ -1,0 +1,105 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""HLO inspector: compile one (arch x shape) on the production mesh and print
+the top ops by bytes/FLOPs — the dry-run 'profiler' used by §Perf to find
+what dominates a roofline term.
+
+  PYTHONPATH=src python -m repro.launch.inspect_hlo --arch granite-3-8b \
+      --shape train_4k --top 25
+"""
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import registry
+from repro.configs.registry import SHAPES
+from repro.launch.dryrun import _dryrun_config, build_step
+from repro.launch.mesh import make_production_mesh
+
+_DT = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+       "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8}
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(sig):
+        if dt not in _DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT[dt]
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--moe-sort", action="store_true")
+    ap.add_argument("--chunked-ce", type=int, default=0)
+    ap.add_argument("--collectives", action="store_true",
+                    help="print unique collective ops with source metadata")
+    args = ap.parse_args()
+
+    shape = SHAPES[args.shape]
+    cfg = _dryrun_config(registry.get_config(args.arch), shape)
+    if args.moe_sort:
+        cfg = cfg.with_(moe_sort_dispatch=True)
+    if args.chunked_ce:
+        from repro.training import losses
+        losses.CHUNKED_CE_BLOCK = args.chunked_ce
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fn, a, in_sh, out_sh, donate = build_step(cfg, shape, mesh)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*a).compile()
+    text = compiled.as_text()
+
+    if args.collectives:
+        import collections
+        seen = collections.Counter()
+        samples = {}
+        for line in text.splitlines():
+            for op in ("all-gather(", "all-reduce(", "reduce-scatter(",
+                       "all-to-all(", "collective-permute("):
+                if op in line and "=" in line:
+                    sig = line.split("=", 1)[1].strip()[:110]
+                    meta = ""
+                    if "op_name=" in line:
+                        meta = line.split("op_name=")[1].split('"')[1][:90]
+                    key = (op[:-1], sig.split(")")[0][:70], meta)
+                    seen[key] += 1
+                    samples[key] = line.strip()[:240]
+        for (op, sig, meta), n in seen.most_common(20):
+            print(f"x{n:4d} {op:18s} {sig}\n      op_name={meta}")
+        return
+
+    # group per-op output bytes by (opcode, shape signature)
+    agg_bytes = defaultdict(lambda: [0, 0])
+    line_re = re.compile(r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?)\s+([a-z0-9_\-]+)\(")
+    for m in line_re.finditer(text):
+        sig, op = m.group(1), m.group(2)
+        b = shape_bytes(sig)
+        key = f"{op} {sig[:60]}"
+        agg_bytes[key][0] += b
+        agg_bytes[key][1] += 1
+    print(f"== top {args.top} op groups by total output bytes "
+          f"({args.arch} x {args.shape}) ==")
+    for key, (b, n) in sorted(agg_bytes.items(), key=lambda kv: -kv[1][0])[
+            : args.top]:
+        print(f"{b/1e9:10.2f} GB  x{n:5d}  {key}")
+    cost = compiled.cost_analysis()
+    print(f"\ncost: flops={cost.get('flops'):.3e} "
+          f"bytes={cost.get('bytes accessed'):.3e}")
+
+
+if __name__ == "__main__":
+    main()

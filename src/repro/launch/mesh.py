@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """A 1x1 mesh over the real local device (CPU smoke/serving paths)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_edge_mesh(n_devices: int = 1):
+    """Edge fleet sub-mesh: pure data-parallel SLM replicas (PICE's p-way
+    semantic parallelism maps onto the data axis)."""
+    return jax.make_mesh((n_devices, 1), ("data", "model"))

@@ -1,0 +1,99 @@
+"""PICE serving launcher: build the cloud engine + edge fleet and run the
+progressive pipeline on a stream of requests (real-compute, tiny models).
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 8 [--train-steps 150]
+
+With --train-steps > 0 the tiny cloud/edge models are first trained on the
+synthetic corpus so sketches/expansions are meaningful (quality metrics are
+reported against the corpus ground truth).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs.pice_cloud_edge import (TINY_CLOUD, TINY_EDGE_CONFIGS)
+from repro.core import metrics as metrics_lib
+from repro.core.profiler import cost_coefficient, profile_engine
+from repro.core.progressive import PICEConfig, PICEPipeline
+from repro.core.scheduler import EdgeModelInfo
+from repro.data import corpus as corpus_lib
+from repro.data import tokenizer as tok
+from repro.data.pipeline import PackedDataset
+from repro.models import transformer
+from repro.serving.engine import InferenceEngine
+from repro.serving.requests import Request
+from repro.training import optimizer as opt_lib
+from repro.training.train_loop import init_train_state, train
+
+
+def build_engines(train_steps: int = 0, seed: int = 0, log_fn=print,
+                  names=None):
+    engines = {}
+    text = corpus_lib.lm_text(2000, seed)
+    caps = {"tiny-cloud": 0.9, "tiny-edge-a": 0.7, "tiny-edge-b": 0.55,
+            "tiny-edge-c": 0.6}
+    pool = [("tiny-cloud", TINY_CLOUD)] + list(TINY_EDGE_CONFIGS.items())
+    if names:
+        pool = [(n, c) for n, c in pool if n in names]
+    for name, cfg in pool:
+        state = init_train_state(cfg, seed)
+        if train_steps:
+            ds = PackedDataset(text, 192, 8, seed)
+            opt_cfg = opt_lib.AdamWConfig(lr=2e-3, warmup_steps=20,
+                                          total_steps=train_steps)
+            log_fn(f"-- training {name} for {train_steps} steps")
+            state = train(cfg, state, iter(ds), opt_cfg, train_steps,
+                          log_every=max(train_steps // 2, 1), log_fn=log_fn)
+        engines[name] = InferenceEngine(cfg, state.params, max_batch=8,
+                                        max_len=1024, name=name)
+    return engines, caps
+
+
+def build_pipeline(engines, caps, log_fn=print,
+                   profile_lengths=(8, 16, 32)) -> PICEPipeline:
+    cloud = engines["tiny-cloud"]
+    lm_cloud = profile_engine(cloud, lengths=profile_lengths, name="tiny-cloud")
+    infos = []
+    for name, eng in engines.items():
+        if name == "tiny-cloud":
+            continue
+        lm = profile_engine(eng, lengths=profile_lengths, name=name)
+        c = cost_coefficient(lm_cloud, lm)
+        log_fn(f"profiled {name}: rate={lm.rate:.1f} tok/s, c={c:.2f}")
+        infos.append(EdgeModelInfo(name=name, latency=lm,
+                                   capability=caps.get(name, 0.5)))
+    edge_engines = {k: v for k, v in engines.items() if k != "tiny-cloud"}
+    return PICEPipeline(cloud, edge_engines, lm_cloud, infos,
+                        cfg=PICEConfig(ensemble_size=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    engines, caps = build_engines(args.train_steps, args.seed)
+    pipe = build_pipeline(engines, caps)
+    examples = corpus_lib.corpus(args.requests, seed=args.seed + 7)
+    t0 = time.time()
+    quality = []
+    for ex in examples:
+        resp = pipe.handle(Request(query=ex.query, category=ex.category))
+        q = metrics_lib.rouge_1(ex.answer, resp.text)[2]
+        quality.append(q)
+        print(f"[{resp.mode:12s}] lat={resp.latency_s:5.2f}s "
+              f"cloud={resp.cloud_tokens:4d}t edge={resp.edge_tokens:4d}t "
+              f"rouge1-f1={q:.3f} | {resp.text[:60]!r}")
+    dt = time.time() - t0
+    print(f"\n{args.requests} requests in {dt:.1f}s "
+          f"({60*args.requests/dt:.1f} req/min); "
+          f"mean quality={sum(quality)/len(quality):.3f}; stats={pipe.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""Parameter / input / cache sharding rules for the production mesh.
+
+Baseline policy (paper-faithful Megatron-style TP over `model`, DP over
+`pod`+`data`):
+  - attention q/o shard heads over `model`; k/v shard kv-heads when they
+    divide (else replicated — standard GQA TP);
+  - MLP + expert FFN shard d_ff over `model` (experts stay whole per shard:
+    robust for 8 or 128 experts);
+  - embedding shards vocab over `model`;
+  - decode caches shard batch over `pod`+`data` when it divides, else the
+    cache length dim (sequence-parallel cache for batch-1 long-context);
+  - optimizer state mirrors the param tree.
+
+`fsdp=True` additionally shards the largest param dim over `data`
+(ZeRO-3-style; a beyond-paper §Perf option).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models.config import ModelConfig
+
+# Per-param-name PartitionSpec templates for UNSTACKED leaves
+# (a leading layer-stack dim gets None prepended automatically).
+_BY_NAME = {
+    "tok": ("model", None),
+    "unembed": (None, "model"),
+    "wq": (None, "model", None),
+    "wk": (None, "model", None),
+    "wv": (None, "model", None),
+    "wo": ("model", None, None),
+    "bq": ("model", None),
+    "bk": ("model", None),
+    "bv": ("model", None),
+    "w_gate": {2: (None, "model"), 3: (None, None, "model")},
+    "w_up": {2: (None, "model"), 3: (None, None, "model")},
+    "w_down": {2: ("model", None), 3: (None, "model", None)},
+    "b_up": ("model",),
+    "b_down": (None,),
+    "router": (None, None),
+    "w_in": (None, "model"),
+    "w_out": ("model", None),
+    "w_ff_gate": (None, "model"),
+    "w_ff_up": (None, "model"),
+    "w_ff_down": ("model", None),
+    # replicated small/recurrent tensors
+    "w_if": (None, None),
+    "w_gates": (None, None),
+    "r_gates": (None, None),
+}
+
+_FSDP_SKIP = {"tok", "unembed"}  # keep embeddings TP-only
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return entry.key
+    return ""
+
+
+def _base_ndim(name: str, template) -> int:
+    if isinstance(template, dict):
+        return -1  # resolved by ndim lookup
+    return len(template)
+
+
+def param_pspec(cfg: ModelConfig, mesh: Mesh, path, leaf,
+                fsdp: bool = False, kv_hd_shard: bool = False,
+                moe_ep: bool = False) -> P:
+    name = _leaf_name(path)
+    template = _BY_NAME.get(name)
+    shape = leaf.shape
+    in_moe = any(isinstance(e, jax.tree_util.DictKey) and e.key == "moe"
+                 for e in path)
+    if moe_ep and in_moe and name in ("w_gate", "w_up", "w_down") \
+            and len(shape) >= 3:
+        # expert-parallel: experts over `model` (dim -3), all-to-all dispatch
+        t = [None] * len(shape)
+        t[-3] = "model"
+        spec = [shd.shardable(mesh, d, a) for d, a in zip(shape, t)]
+        if spec[-3] is not None:
+            return P(*spec)
+    if kv_hd_shard and name in ("wk", "wv"):
+        # GQA with n_kv < model-axis: shard the head_dim instead, matching
+        # the decode cache layout (kills the cache-update reshard — §Perf).
+        nkv = shape[-2]
+        if shd.shardable(mesh, nkv, "model") is None:
+            t = [None] * (len(shape) - 1) + ["model"]
+            spec = [shd.shardable(mesh, d, a) for d, a in zip(shape, t)]
+            return P(*spec)
+    if template is None:
+        spec = [None] * len(shape)
+    else:
+        if isinstance(template, dict):
+            t = template.get(len(shape)) or template.get(len(shape) - 1)
+            if t is None:
+                spec = [None] * len(shape)
+            else:
+                t = list(t)
+                if len(t) == len(shape) - 1:
+                    t = [None] + t
+                spec = t
+        else:
+            t = list(template)
+            if len(t) == len(shape) - 1:      # stacked on a layer axis
+                t = [None] + t
+            elif len(t) != len(shape):
+                t = [None] * len(shape)
+            spec = t
+    # drop non-divisible axes
+    spec = [shd.shardable(mesh, d, a) for d, a in zip(shape, spec)]
+    if fsdp and name not in _FSDP_SKIP:
+        # shard the largest still-unsharded dim over data
+        free = [i for i, a in enumerate(spec) if a is None]
+        if free:
+            i = max(free, key=lambda j: shape[j])
+            if shape[i] % shd.axis_size(mesh, "data") == 0:
+                spec[i] = "data"
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape,
+                    fsdp: bool = False, kv_hd_shard: bool = False,
+                    moe_ep: bool = False):
+    return shd.tree_shardings(
+        mesh, params_shape,
+        lambda path, leaf: param_pspec(cfg, mesh, path, leaf, fsdp=fsdp,
+                                       kv_hd_shard=kv_hd_shard, moe_ep=moe_ep))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, shape) -> P:
+    b = shd.batch_axes(mesh)
+    spec = [b] + [None] * (len(shape) - 1)
+    return shd.pspec(mesh, shape, spec)
+
+
+def _cache_leaf_pspec(mesh: Mesh, name: str, shape,
+                      kv_policy: str = "hd_model") -> P:
+    b = shd.batch_axes(mesh)
+    if name == "lengths":
+        return shd.pspec(mesh, shape, [b])
+    if name in ("k", "v", "cross_k", "cross_v"):
+        # (L, B, S, n_kv, hd)
+        L, B, S, nkv, hd = shape
+        batch_ok = shd.shardable(mesh, B, b) is not None
+        seq_axis = None if batch_ok else b
+        kv_axis = "model" if shd.shardable(mesh, nkv, "model") else None
+        if kv_policy == "replicate":
+            # cache replicates over `model` when n_kv doesn't divide
+            hd_axis = None
+        elif kv_policy == "seq_model":
+            # §Perf winner for GQA decode: shard the cache LENGTH over
+            # `model` — QK contracts hd (local), PV partial-sums are tiny
+            # (B,1,Nq,hd) all-reduces, and the position-`length` scatter
+            # lands on one shard (proven collective-free by the batch-1
+            # long_500k rows, which shard S over `data` the same way).
+            return shd.pspec(mesh, shape, [None, b if batch_ok else None,
+                                           "model" if batch_ok else b,
+                                           None, None])
+        else:
+            hd_axis = None if kv_axis else "model"
+        return shd.pspec(mesh, shape, [None, b if batch_ok else None,
+                                       seq_axis, kv_axis, hd_axis])
+    if name == "conv":      # (L, B, K-1, inner)
+        return shd.pspec(mesh, shape, [None, b, None, "model"])
+    if name == "ssd":       # (L, B, H, P, N)
+        return shd.pspec(mesh, shape, [None, b, "model", None, None])
+    if name == "C":         # mlstm (L, B, H, hd, hd)
+        return shd.pspec(mesh, shape, [None, b, "model", None, None])
+    if name in ("n",):      # (L, B, H, hd) or slstm (L, B, d)
+        if len(shape) == 4:
+            return shd.pspec(mesh, shape, [None, b, "model", None])
+        return shd.pspec(mesh, shape, [None, b, "model"])
+    if name in ("m", "h", "c"):
+        spec = [None, b] + [None] * (len(shape) - 2)
+        if len(shape) == 3:
+            spec[2] = "model"
+        return shd.pspec(mesh, shape, spec)
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(mesh: Mesh, cache_tree, kv_policy: str = "hd_model"):
+    def spec_fn(path, leaf):
+        name = _leaf_name(path)
+        if not hasattr(leaf, "shape"):
+            return P()
+        return _cache_leaf_pspec(mesh, name, leaf.shape, kv_policy=kv_policy)
+    return shd.tree_shardings(mesh, cache_tree, spec_fn)
+
+
+def input_shardings(mesh: Mesh, specs: dict, kv_policy: str = "hd_model"):
+    """NamedShardings for the input_specs() dict of a step function."""
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = cache_shardings(mesh, v, kv_policy=kv_policy)
+        elif hasattr(v, "shape"):
+            out[k] = NamedSharding(mesh, batch_pspec(mesh, v.shape))
+        else:
+            out[k] = v
+    return out

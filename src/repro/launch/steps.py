@@ -1,0 +1,66 @@
+"""Step-function builders shared by the trainer, server, and dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.training import losses as losses_lib
+from repro.training import optimizer as opt_lib
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.AdamWConfig, mesh=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch: {tokens, targets[, enc_frames][, prefix_embeds]}.
+    """
+    prefix_len = cfg.n_prefix_tokens if cfg.family == "vlm" else 0
+    cdt = jnp.dtype(cfg.dtype)
+
+    def _cast_once(params):
+        # norm scales and small vectors stay f32 (layers upcast internally)
+        return jax.tree.map(
+            lambda p: p.astype(cdt)
+            if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params)
+
+    def loss_fn(params, batch):
+        if cfg.cast_params_once:
+            params = _cast_once(params)
+        logits, aux = transformer.forward(
+            cfg, params, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_frames=batch.get("enc_frames"),
+            mesh=mesh)
+        total, metrics = losses_lib.lm_loss(cfg, logits, batch["targets"], aux,
+                                            prefix_len=prefix_len)
+        return total, metrics
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, opt_metrics = opt_lib.adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    def prefill_step(params, tokens, cache, prompt_lengths=None,
+                     enc_frames=None, prefix_embeds=None):
+        return transformer.prefill(cfg, params, tokens, cache,
+                                   prefix_embeds=prefix_embeds,
+                                   enc_frames=enc_frames,
+                                   prompt_lengths=prompt_lengths, mesh=mesh)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    def decode_step(params, tokens, cache):
+        return transformer.decode_step(cfg, params, tokens, cache, mesh=mesh)
+    return decode_step

@@ -1,0 +1,49 @@
+"""Training launcher.
+
+Local mode (default): trains a reduced variant of --arch on the synthetic
+corpus on this host's devices. Production mode (--dry-run): lowers the
+full-size config on the production mesh (see dryrun.py for the full sweep).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import registry
+from repro.data import corpus as corpus_lib
+from repro.data.pipeline import PackedDataset
+from repro.training import optimizer as opt_lib
+from repro.training.checkpoint import save
+from repro.training.train_loop import init_train_state, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch).reduced(remat=False)
+    print(f"training reduced {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"family={cfg.family}")
+    text = corpus_lib.lm_text(3000, args.seed)
+    ds = PackedDataset(text, args.seq_len, args.batch, args.seed)
+    state = init_train_state(cfg, args.seed)
+    opt_cfg = opt_lib.AdamWConfig(lr=args.lr, warmup_steps=20,
+                                  total_steps=args.steps)
+    state = train(cfg, state, iter(ds), opt_cfg, args.steps)
+    if args.ckpt:
+        path = save(args.ckpt, state.step, state.params)
+        print(f"saved checkpoint to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""GQA attention: training/prefill (full-sequence) and decode (cached) paths.
+
+Pure-jnp reference implementations; `cfg.use_pallas=True` routes the hot paths
+through the Pallas kernels in repro.kernels (flash_attention for prefill,
+decode_attention for cached decode).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as cache_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False,
+                   kv_d_model: Optional[int] = None) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    n_q, n_kv = cfg.n_heads, cfg.n_kv_heads
+    kd = kv_d_model or d
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(k1, (d, n_q, hd), dtype=pd),
+        "wk": dense_init(k2, (kd, n_kv, hd), dtype=pd),
+        "wv": dense_init(k3, (kd, n_kv, hd), dtype=pd),
+        "wo": dense_init(k4, (n_q, hd, d), in_axis=1, dtype=pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_q, hd), pd)
+        p["bk"] = jnp.zeros((n_kv, hd), pd)
+        p["bv"] = jnp.zeros((n_kv, hd), pd)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), pd)
+        p["k_norm"] = jnp.ones((hd,), pd)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, params: dict, x: jax.Array,
+                 kv_x: Optional[jax.Array] = None):
+    dt = x.dtype
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dnh->bsnh", kv_x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", kv_x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if "q_norm" in params:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, q_per_kv: int) -> jax.Array:
+    """(B,S,n_kv,hd) -> (B,S,n_q,hd) by repeating each kv head."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def _sdpa(q, k, v, mask, softcap: float = 0.0):
+    """q: (B,Tq,N,hd), k/v: (B,Tk,N,hd), mask broadcastable (B,1,Tq,Tk)."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)
+    return out
+
+
+# Use q-blocked attention when the logits matrix would exceed this many
+# elements per (batch, head) — avoids materializing S x S at long context.
+CHUNK_THRESHOLD = 4096 * 4096
+CHUNK_BQ = 512
+
+
+def chunked_sdpa(q, k, v, *, causal: bool, window: int = 0,
+                 kv_lengths: Optional[jax.Array] = None,
+                 softcap: float = 0.0) -> jax.Array:
+    """Q-blocked attention (flash-style, pure jnp, lax.map over q blocks).
+
+    q: (B,Sq,N,hd), k/v: (B,Sk,N,hd) already head-repeated. Never materializes
+    more than (B, bq, N, Sk_eff) logits; with a sliding window only a
+    (window + bq) K/V slice is read per block (true sub-quadratic compute).
+    """
+    B, Sq, N, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(CHUNK_BQ, Sq)
+    while Sq % bq:
+        bq //= 2
+    nb = Sq // bq
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    use_window_slice = bool(window) and (window + bq) <= Sk
+
+    def block(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, axis=1)
+        rows = i * bq + jnp.arange(bq)
+        if use_window_slice:
+            start = jnp.clip(i * bq + bq - (window + bq), 0, Sk - (window + bq))
+            ki = jax.lax.dynamic_slice_in_dim(k, start, window + bq, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, window + bq, axis=1)
+            cols = start + jnp.arange(window + bq)
+        else:
+            ki, vi = k, v
+            cols = jnp.arange(Sk)
+        logits = jnp.einsum("bqnh,bknh->bnqk", qi.astype(jnp.float32),
+                            ki.astype(jnp.float32)) * scale
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        m = jnp.ones((bq, cols.shape[0]), bool)
+        if causal:
+            m = m & (cols[None, :] <= rows[:, None])
+        if window:
+            m = m & (cols[None, :] > rows[:, None] - window)
+        m = m[None, None]
+        if kv_lengths is not None:
+            m = m & (cols[None, None, None, :] < kv_lengths[:, None, None, None])
+        logits = jnp.where(m, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), vi)
+
+    # checkpoint each q-block: the VJP otherwise stores every block's f32
+    # probs — a full (B, N, Sq, Sk) attention matrix across the loop (§Perf:
+    # 343 GB/device at granite train_4k). Recomputed in backward instead.
+    outs = jax.lax.map(jax.checkpoint(block), jnp.arange(nb))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, N, hd)
+
+
+def full_or_chunked_sdpa(q, k, v, *, causal: bool, window: int = 0,
+                         kv_lengths: Optional[jax.Array] = None,
+                         softcap: float = 0.0) -> jax.Array:
+    """Dense SDPA for short sequences, q-blocked for long ones."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq * Sk >= CHUNK_THRESHOLD and Sq > 1:
+        return chunked_sdpa(q, k, v, causal=causal, window=window,
+                            kv_lengths=kv_lengths, softcap=softcap)
+    mask = jnp.ones((1, 1, Sq, Sk), bool)
+    if causal and Sq == Sk:
+        mask = causal_mask(Sq, Sk, window=window)
+    if kv_lengths is not None:
+        mask = mask & (jnp.arange(Sk)[None, None, None, :]
+                       < kv_lengths[:, None, None, None])
+    return _sdpa(q, k, v, mask, softcap)
+
+
+def causal_mask(Tq: int, Tk: int, q_offset: int = 0,
+                window: int = 0) -> jax.Array:
+    """(1,1,Tq,Tk) bool; window>0 applies sliding-window causality."""
+    qi = jnp.arange(Tq)[:, None] + q_offset
+    ki = jnp.arange(Tk)[None, :]
+    m = ki <= qi
+    if window:
+        m = m & (ki > qi - window)
+    return m[None, None]
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attention_fwd(cfg: ModelConfig, params: dict, x: jax.Array,
+                  positions: jax.Array, *, causal: bool = True,
+                  segment_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Self-attention over a full sequence. x: (B, S, D)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=causal,
+                                     window=cfg.sliding_window,
+                                     softcap=cfg.attn_logit_softcap)
+    else:
+        k = _repeat_kv(k, cfg.q_per_kv)
+        v = _repeat_kv(v, cfg.q_per_kv)
+        if segment_mask is not None:
+            mask = causal_mask(S, S, window=cfg.sliding_window) if causal \
+                else jnp.ones((1, 1, S, S), bool)
+            out = _sdpa(q, k, v, mask & segment_mask, cfg.attn_logit_softcap)
+        else:
+            out = full_or_chunked_sdpa(q, k, v, causal=causal,
+                                       window=cfg.sliding_window,
+                                       softcap=cfg.attn_logit_softcap)
+    dt = x.dtype
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+
+
+def cross_attention_fwd(cfg: ModelConfig, params: dict, x: jax.Array,
+                        enc_out: jax.Array) -> jax.Array:
+    """Cross-attention (whisper decoder): x (B,T,D) attends enc_out (B,Se,De)."""
+    q, k, v = _project_qkv(cfg, params, x, kv_x=enc_out)
+    k = _repeat_kv(k, cfg.q_per_kv)
+    v = _repeat_kv(v, cfg.q_per_kv)
+    out = full_or_chunked_sdpa(q, k, v, causal=False,
+                               softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def cross_attention_cached(cfg: ModelConfig, params: dict, x: jax.Array,
+                           ck: jax.Array, cv: jax.Array) -> jax.Array:
+    """Decode-time cross-attention against precomputed enc K/V (B,Se,n_kv,hd)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+    k = _repeat_kv(ck, cfg.q_per_kv)
+    v = _repeat_kv(cv, cfg.q_per_kv)
+    out = full_or_chunked_sdpa(q, k, v, causal=False,
+                               softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Decode (single or few new tokens against a cache)
+# ---------------------------------------------------------------------------
+
+def attention_decode(cfg: ModelConfig, params: dict, x: jax.Array,
+                     layer_k: jax.Array, layer_v: jax.Array,
+                     lengths: jax.Array, window: int = 0
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode step. x: (B, T, D) with T new tokens (usually 1).
+
+    layer_k/layer_v: (B, Scache, n_kv, hd); lengths: (B,) tokens already in
+    cache. Returns (out, new_layer_k, new_layer_v).
+    """
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x)
+    positions = lengths[:, None] + jnp.arange(T)[None, :]
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    layer_k, layer_v = cache_lib.update_layer_kv(layer_k, layer_v, lengths,
+                                                 k, v, window=window)
+    Sc = layer_k.shape[1]
+    if cfg.use_pallas and T == 1 and not window:
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention(q, layer_k, layer_v, lengths + T)
+    else:
+        ki = jnp.arange(Sc)[None, None, :]                     # (1,1,Sc)
+        qpos = positions[:, :, None]                           # (B,T,1)
+        if window:
+            # ring buffer: entry at slot s holds absolute position p iff
+            # p % window == s and p <= qpos and p > qpos - window.
+            # Reconstruct absolute position of each slot given current length.
+            total = lengths[:, None, None] + T                 # tokens after write
+            abs_pos = ki + ((total - 1 - ki) // window) * window
+            valid = (abs_pos <= qpos) & (abs_pos > qpos - window) & (abs_pos >= 0)
+            mask = valid[:, None]                              # (B,1,T,Sc)
+        else:
+            mask = (ki <= qpos)[:, None]
+        out = _grouped_sdpa(q, layer_k, layer_v, mask, cfg.q_per_kv,
+                            cfg.attn_logit_softcap)
+    dt = x.dtype
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+    return out, layer_k, layer_v
+
+
+def _grouped_sdpa(q, k, v, mask, q_per_kv: int, softcap: float = 0.0):
+    """GQA attention WITHOUT materializing repeated K/V.
+
+    q: (B,Tq,Nq,hd) -> grouped (B,Tq,Nkv,g,hd); k/v: (B,Tk,Nkv,hd); mask
+    broadcastable to (B,1,Tq,Tk). jnp.repeat of the cache forces GSPMD to
+    reshard it (involuntary full-rematerialization all-gathers — §Perf:
+    77 GB/step at qwen3-8b decode_32k); the grouped einsum keeps the cache
+    sharding intact.
+    """
+    if q_per_kv == 1:
+        return _sdpa(q, k, v, mask, softcap)
+    B, Tq, Nq, hd = q.shape
+    Nkv = k.shape[2]
+    qg = q.reshape(B, Tq, Nkv, q_per_kv, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # keep operands in their storage dtype (bf16) with f32 MXU accumulation:
+    # upcasting the cache first would double any resharding traffic (§Perf)
+    logits = jnp.einsum("bqngh,bknh->bngqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngqk,bknh->bqngh", probs.astype(v.dtype), v)
+    return out.reshape(B, Tq, Nq, hd)

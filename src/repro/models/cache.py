@@ -1,0 +1,82 @@
+"""Decode-time state: KV caches (full, sliding-window, paged) and SSM states.
+
+Caches are plain pytrees (dicts of arrays) so they thread through jit/scan and
+shard with NamedSharding like any other value. Layout conventions:
+
+  full KV      : k/v (L, B, S_max, n_kv, hd), lengths (B,)
+  windowed KV  : k/v (L, B, W, n_kv, hd) ring buffer, lengths (B,)
+  ssm state    : conv (L, B, conv_w-1, inner), ssd (L, B, H, hd, N)
+  xlstm state  : per-kind stacked states (see xlstm.py)
+
+`lengths` is per-slot so continuous batching can mix requests at different
+decode offsets in one batch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_kv_cache(n_layers: int, batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16, window: int = 0) -> dict:
+    size = window if window else max_len
+    return {
+        "k": jnp.zeros((n_layers, batch, size, n_kv, head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, size, n_kv, head_dim), dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "window": window,  # static python int (0 = full)
+    }
+
+
+def kv_cache_spec(n_layers: int, batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16, window: int = 0) -> dict:
+    """ShapeDtypeStruct stand-ins (for dry-run lowering, no allocation)."""
+    size = window if window else max_len
+    return {
+        "k": jax.ShapeDtypeStruct((n_layers, batch, size, n_kv, head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((n_layers, batch, size, n_kv, head_dim), dtype),
+        "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "window": window,
+    }
+
+
+def update_layer_kv(layer_k: jax.Array, layer_v: jax.Array, lengths: jax.Array,
+                    new_k: jax.Array, new_v: jax.Array, window: int = 0):
+    """Write new_k/new_v (B, T, n_kv, hd) at per-slot offsets `lengths`.
+
+    Returns updated (k, v). For windowed caches the write index wraps (ring
+    buffer). T is usually 1 (decode) but prefill-into-cache works too.
+    """
+    B, T = new_k.shape[0], new_k.shape[1]
+    size = layer_k.shape[1]
+
+    def write_one(k_b, v_b, len_b, nk_b, nv_b):
+        if window:
+            idx = (len_b + jnp.arange(T)) % window
+            k_b = k_b.at[idx].set(nk_b)
+            v_b = v_b.at[idx].set(nv_b)
+        else:
+            k_b = jax.lax.dynamic_update_slice(k_b, nk_b, (len_b, 0, 0))
+            v_b = jax.lax.dynamic_update_slice(v_b, nv_b, (len_b, 0, 0))
+        return k_b, v_b
+
+    k, v = jax.vmap(write_one)(layer_k, layer_v, lengths, new_k, new_v)
+    return k, v
+
+
+def init_ssm_state(n_layers: int, batch: int, n_heads: int, head_dim: int,
+                   state: int, conv_width: int, inner: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((n_layers, batch, conv_width - 1, inner), dtype),
+        "ssd": jnp.zeros((n_layers, batch, n_heads, head_dim, state), dtype),
+    }
+
+
+def ssm_state_spec(n_layers: int, batch: int, n_heads: int, head_dim: int,
+                   state: int, conv_width: int, inner: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, conv_width - 1, inner), dtype),
+        "ssd": jax.ShapeDtypeStruct((n_layers, batch, n_heads, head_dim, state), dtype),
+    }

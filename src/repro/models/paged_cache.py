@@ -1,0 +1,102 @@
+"""Paged KV cache (vLLM PagedAttention analogue, pure JAX).
+
+Physical storage is a page pool per layer; sequences map to pages through a
+block table, so slot memory is allocated on demand and freed on completion —
+no per-slot max_len reservation. The TPU-native read path gathers a
+sequence's pages into the contiguous layout and reuses the standard decode
+attention (on real TPUs the decode_attention Pallas kernel streams pages
+HBM->VMEM directly; the gather formulation is its jnp oracle).
+
+Layout:
+  pages:       (L, n_pages, page_size, n_kv, hd)
+  block_table: (B, max_pages_per_seq) int32  (-1 = unmapped)
+  lengths:     (B,)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_paged_kv(n_layers: int, n_pages: int, page_size: int, n_kv: int,
+                  head_dim: int, batch: int, max_pages_per_seq: int,
+                  dtype=jnp.bfloat16) -> dict:
+    return {
+        "k_pages": jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
+                             dtype),
+        "v_pages": jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
+                             dtype),
+        "block_table": jnp.full((batch, max_pages_per_seq), -1, jnp.int32),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def gather_sequence(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """pages: (n_pages, page, n_kv, hd); block_table: (B, P) ->
+    contiguous (B, P*page, n_kv, hd). Unmapped (-1) pages read page 0 and
+    must be masked by `lengths` downstream."""
+    idx = jnp.maximum(block_table, 0)
+    g = pages[idx]                                   # (B, P, page, kv, hd)
+    B, P, page, kv, hd = g.shape
+    return g.reshape(B, P * page, kv, hd)
+
+
+def write_token(pages_k: jax.Array, pages_v: jax.Array, block_table: jax.Array,
+                lengths: jax.Array, new_k: jax.Array, new_v: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Write one token per slot at its current length.
+
+    pages_*: (n_pages, page, kv, hd); new_*: (B, 1, kv, hd)."""
+    page_size = pages_k.shape[1]
+    pos = lengths
+    page_of = jnp.take_along_axis(block_table, (pos // page_size)[:, None],
+                                  axis=1)[:, 0]          # (B,)
+    off = pos % page_size
+    safe_page = jnp.maximum(page_of, 0)
+    pages_k = pages_k.at[safe_page, off].set(new_k[:, 0], mode="drop")
+    pages_v = pages_v.at[safe_page, off].set(new_v[:, 0], mode="drop")
+    return pages_k, pages_v
+
+
+@dataclasses.dataclass
+class PageAllocator:
+    """Host-side page bookkeeping (free list + per-slot page chains)."""
+    n_pages: int
+    page_size: int
+    max_pages_per_seq: int
+
+    def __post_init__(self):
+        self.free: List[int] = list(range(self.n_pages))
+        self.owned: dict = {}
+
+    def alloc_for(self, slot: int, n_tokens: int) -> List[int]:
+        need = max(1, -(-n_tokens // self.page_size))
+        assert need <= self.max_pages_per_seq, "sequence exceeds block table"
+        if len(self.free) < need:
+            raise MemoryError("page pool exhausted")
+        pages = [self.free.pop() for _ in range(need)]
+        self.owned[slot] = pages
+        return pages
+
+    def extend(self, slot: int, new_len: int) -> Optional[int]:
+        """Grow slot to cover new_len tokens; returns new page id if mapped."""
+        pages = self.owned.get(slot, [])
+        need = max(1, -(-new_len // self.page_size))
+        if need <= len(pages):
+            return None
+        if not self.free:
+            raise MemoryError("page pool exhausted")
+        p = self.free.pop()
+        pages.append(p)
+        self.owned[slot] = pages
+        return p
+
+    def release(self, slot: int) -> None:
+        self.free.extend(self.owned.pop(slot, []))
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.n_pages

@@ -1,0 +1,139 @@
+"""Mamba2 (SSD) block in pure JAX: chunked parallel scan for train/prefill,
+O(1) recurrent update for decode.
+
+Structure follows arXiv:2405.21060 (Mamba2) as used by Zamba2 (arXiv:2411.15242):
+  in_proj -> [z | x | B | C | dt], short causal conv on x, SSD recurrence
+  h_t = exp(A*dt_t) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t^T h_t + D x_t
+with scalar A per head (SSD restriction), multi-head x (H heads of P dims),
+shared B/C across heads (n_groups=1), gated output y * silu(z).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    inner = cfg.ssm_expand * cfg.d_model
+    n_heads = cfg.resolved_ssm_heads
+    head_dim = inner // n_heads
+    return inner, n_heads, head_dim, cfg.ssm_state
+
+
+def init_mamba2(cfg: ModelConfig, key) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    inner, H, P, N = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * inner + 2 * N + H), dtype=pd),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, inner)) * 0.1).astype(pd),
+        "conv_b": jnp.zeros((inner,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, float(H), H)).astype(pd),
+        "D": jnp.ones((H,), pd),
+        "dt_bias": jnp.zeros((H,), pd),
+        "norm_scale": jnp.ones((inner,), pd),
+        "w_out": dense_init(ks[2], (inner, d), dtype=pd),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    inner, H, P, N = ssm_dims(cfg)
+    z, xbc = proj[..., :inner], proj[..., inner:]
+    x = xbc[..., :inner]
+    B = xbc[..., inner:inner + N]
+    C = xbc[..., inner + N:inner + 2 * N]
+    dt = xbc[..., inner + 2 * N:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B,S,inner), w: (K,inner). Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+K-1, inner)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return y + b.astype(x.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None, use_pallas: bool = False):
+    """Chunked SSD scan.
+
+    x: (Bb,S,H,P), dt: (Bb,S,H) (already softplus'ed), A: (H,) negative,
+    B/C: (Bb,S,N). Returns (y (Bb,S,H,P), final_state (Bb,H,P,N)).
+    """
+    if use_pallas:
+        from repro.kernels.ssm_scan import ops as ssd_ops
+        return ssd_ops.ssm_scan(x, dt, A, B, C, chunk=chunk,
+                                initial_state=initial_state)
+    from repro.kernels.ssm_scan import ref as ssd_ref
+    return ssd_ref.ssd_chunked_ref(x, dt, A, B, C, chunk=chunk,
+                                   initial_state=initial_state)
+
+
+def mamba2_fwd(cfg: ModelConfig, params: dict, u: jax.Array,
+               conv_state: Optional[jax.Array] = None,
+               ssd_state: Optional[jax.Array] = None,
+               return_state: bool = False):
+    """u: (Bb, S, D). Full-sequence path (train/prefill)."""
+    dt_ = u.dtype
+    Bb, S, _ = u.shape
+    inner, H, P, N = ssm_dims(cfg)
+    proj = u @ params["w_in"].astype(dt_)
+    z, x, Bm, Cm, dt = _split_proj(cfg, proj)
+    x, new_conv = _causal_conv(x, params["conv_w"], params["conv_b"], conv_state)
+    x = jax.nn.silu(x)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = x.reshape(Bb, S, H, P)
+    y, final_state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                                 Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                                 cfg.ssm_chunk, initial_state=ssd_state,
+                                 use_pallas=cfg.use_pallas)
+    y = y + xh.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bb, S, inner).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(dt_)
+    if return_state:
+        return out, new_conv, final_state
+    return out
+
+
+def mamba2_decode(cfg: ModelConfig, params: dict, u: jax.Array,
+                  conv_state: jax.Array, ssd_state: jax.Array):
+    """Single-token recurrent step. u: (Bb, 1, D).
+
+    conv_state: (Bb, K-1, inner); ssd_state: (Bb, H, P, N) float32.
+    """
+    dt_ = u.dtype
+    Bb = u.shape[0]
+    inner, H, P, N = ssm_dims(cfg)
+    proj = u @ params["w_in"].astype(dt_)
+    z, x, Bm, Cm, dt = _split_proj(cfg, proj)
+    x, new_conv = _causal_conv(x, params["conv_w"], params["conv_b"], conv_state)
+    x = jax.nn.silu(x)[:, 0]                                   # (Bb, inner)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (Bb,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (H,)
+    xh = x.reshape(Bb, H, P).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)                          # (Bb,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])                           # (Bb,H)
+    upd = (dt[:, :, None] * xh)[..., None] * Bv[:, None, None, :]  # (Bb,H,P,N)
+    new_state = ssd_state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cv)
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bb, 1, inner).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(dt_)
+    return out, new_conv, new_state

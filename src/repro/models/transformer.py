@@ -1,0 +1,540 @@
+"""Model stacks: decoder-only / MoE / SSM / xLSTM / hybrid / enc-dec / VLM.
+
+Layers are grouped into homogeneous *segments* (contiguous runs of the same
+block kind). Each segment's params are stacked on a leading layer axis and
+executed with lax.scan (cfg.scan_layers=False unrolls — used by the dry-run
+so XLA cost analysis sees every layer's FLOPs).
+
+Public entry points:
+  init_params(cfg, key)
+  forward(cfg, params, tokens, ...)         -> logits (train / scoring)
+  prefill(cfg, params, tokens, cache, ...)  -> (logits, cache)
+  decode_step(cfg, params, tokens, cache)   -> (logits, cache)
+  init_cache(cfg, batch, max_len) / cache_specs(...)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import attention as attn_lib
+from repro.models import cache as cache_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.config import (ATTN, MAMBA2, MLSTM, MOE, SHARED_ATTN, SLSTM,
+                                 EncoderConfig, ModelConfig)
+from repro.models.layers import (dense_init, embed, embed_init, init_embedding,
+                                 init_mlp, init_norm, mlp, norm, unembed)
+
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+
+def segments_of(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    pat = cfg.block_pattern()
+    segs: List[Tuple[str, int]] = []
+    for kind in pat:
+        if segs and segs[-1][0] == kind:
+            segs[-1] = (kind, segs[-1][1] + 1)
+        else:
+            segs.append((kind, 1))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Per-block init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, key, kind: str, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind == ATTN or kind == SHARED_ATTN:
+        p = {
+            "norm1": init_norm(cfg, d),
+            "attn": attn_lib.init_attention(cfg, ks[0]),
+            "norm2": init_norm(cfg, d),
+            "mlp": init_mlp(cfg, ks[1], d, cfg.d_ff, gated=not cfg.use_layernorm),
+        }
+        if cross:
+            p["norm_x"] = init_norm(cfg, d)
+            p["xattn"] = attn_lib.init_attention(
+                cfg, ks[2], cross=True, kv_d_model=cfg.encoder.d_model)
+        return p
+    if kind == MOE:
+        return {
+            "norm1": init_norm(cfg, d),
+            "attn": attn_lib.init_attention(cfg, ks[0]),
+            "norm2": init_norm(cfg, d),
+            "moe": moe_lib.init_moe(cfg, ks[1]),
+        }
+    if kind == MAMBA2:
+        return {"norm1": init_norm(cfg, d), "mamba": ssm_lib.init_mamba2(cfg, ks[0])}
+    if kind == MLSTM:
+        return {"norm1": init_norm(cfg, d), "mlstm": xlstm_lib.init_mlstm(cfg, ks[0])}
+    if kind == SLSTM:
+        return {"norm1": init_norm(cfg, d), "slstm": xlstm_lib.init_slstm(cfg, ks[0])}
+    raise ValueError(kind)
+
+
+def _stack_init(cfg: ModelConfig, key, kind: str, count: int, cross: bool) -> dict:
+    keys = jax.random.split(key, count)
+    return jax.vmap(lambda k: _init_block(cfg, k, kind, cross))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder (over stubbed frame/patch embeddings)
+# ---------------------------------------------------------------------------
+
+def _enc_cfg_as_model(cfg: ModelConfig) -> ModelConfig:
+    e = cfg.encoder
+    return cfg.with_(d_model=e.d_model, n_heads=e.n_heads, n_kv_heads=e.n_kv_heads,
+                     d_ff=e.d_ff, n_layers=e.n_layers, use_rope=False,
+                     sliding_window=0, qk_norm=False, qkv_bias=cfg.qkv_bias)
+
+
+def _init_encoder(cfg: ModelConfig, key) -> dict:
+    ecfg = _enc_cfg_as_model(cfg)
+    e = cfg.encoder
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "pos": embed_init(k1, (e.n_ctx, e.d_model), jnp.dtype(cfg.param_dtype)),
+        "blocks": _stack_init(ecfg, k2, ATTN, e.n_layers, cross=False),
+        "final_norm": init_norm(cfg, e.d_model),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array,
+           mesh=None) -> jax.Array:
+    """frames: (B, n_ctx, d_enc) stub embeddings -> encoder output."""
+    ecfg = _enc_cfg_as_model(cfg)
+    x = frames + params["pos"].astype(frames.dtype)[None, : frames.shape[1]]
+    positions = jnp.arange(frames.shape[1])[None]
+
+    def body(x, blk):
+        h = attn_lib.attention_fwd(ecfg, blk["attn"],
+                                   norm(ecfg, blk["norm1"], x), positions,
+                                   causal=False)
+        x = x + h
+        x = x + mlp(ecfg, blk["mlp"], norm(ecfg, blk["norm2"], x))
+        return x, None
+
+    x, _ = _run_segment(ecfg, params["blocks"], x, body, mesh)
+    return norm(ecfg, params["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    cfg.validate()
+    segs = segments_of(cfg)
+    keys = jax.random.split(key, len(segs) + 5)
+    cross = cfg.family == "encdec"
+    p: Dict[str, Any] = {"embed": init_embedding(cfg, keys[0])}
+    seg_params = []
+    shared_done = False
+    for i, (kind, count) in enumerate(segs):
+        if kind == SHARED_ATTN:
+            if not shared_done:
+                p["shared"] = _init_block(cfg, keys[i + 1], SHARED_ATTN)
+                shared_done = True
+            seg_params.append({})  # weights live in p["shared"]
+        else:
+            seg_params.append(_stack_init(cfg, keys[i + 1], kind, count, cross))
+    p["segments"] = seg_params
+    p["final_norm"] = init_norm(cfg, cfg.d_model)
+    if cfg.family == "encdec":
+        p["encoder"] = _init_encoder(cfg, keys[-1])
+        p["dec_pos"] = embed_init(keys[-2], (cfg.max_seq_len, cfg.d_model),
+                                  jnp.dtype(cfg.param_dtype))
+    if cfg.length_buckets:
+        p["length_head"] = dense_init(keys[-3], (cfg.d_model, cfg.length_buckets))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Segment runner (scan or unroll, with optional remat + sharding constraint)
+# ---------------------------------------------------------------------------
+
+def _act_axes(cfg: ModelConfig, mesh):
+    if mesh is None:
+        return None
+    b = shd.batch_axes(mesh)
+    if cfg.act_shard == "batch_seq":
+        return (b, "model", None)
+    if cfg.act_shard == "batch_model":
+        return (b, None, "model")
+    return (b, None, None)
+
+
+def _constrain(cfg: ModelConfig, mesh, x):
+    axes = _act_axes(cfg, mesh)
+    if axes is None or mesh is None:
+        return x
+    return shd.constraint(x, mesh, axes)
+
+
+def _scan_or_unroll(cfg: ModelConfig, fn, init, xs):
+    """lax.scan over stacked layers, or a python unroll (cfg.scan_layers=False,
+    used by the dry-run so XLA cost analysis sees every layer)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(fn, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        carry, y = fn(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _run_segment(cfg: ModelConfig, stacked: dict, x: jax.Array, body, mesh):
+    """Run body over stacked layer params. body: (x, blk) -> (x, aux|None)."""
+    def fn(x, blk):
+        x = _constrain(cfg, mesh, x)
+        return body(x, blk)
+
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+    return _scan_or_unroll(cfg, fn, x, stacked)
+
+
+# ---------------------------------------------------------------------------
+# Block bodies (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _block_fwd_full(cfg: ModelConfig, kind: str, blk: dict, x, positions,
+                    enc_out=None, mesh=None):
+    """Returns (x, aux) for one block over a full sequence."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (ATTN, SHARED_ATTN, MOE):
+        h = attn_lib.attention_fwd(cfg, blk["attn"], norm(cfg, blk["norm1"], x),
+                                   positions, causal=True)
+        x = x + h
+        if enc_out is not None and "xattn" in blk:
+            x = x + attn_lib.cross_attention_fwd(
+                cfg, blk["xattn"], norm(cfg, blk["norm_x"], x), enc_out)
+        if kind == MOE:
+            h, aux = moe_lib.moe_fwd(cfg, blk["moe"], norm(cfg, blk["norm2"], x),
+                                     mesh=mesh)
+        else:
+            h = mlp(cfg, blk["mlp"], norm(cfg, blk["norm2"], x))
+        return x + h, aux
+    if kind == MAMBA2:
+        return x + ssm_lib.mamba2_fwd(cfg, blk["mamba"],
+                                      norm(cfg, blk["norm1"], x)), aux
+    if kind == MLSTM:
+        return x + xlstm_lib.mlstm_fwd(cfg, blk["mlstm"],
+                                       norm(cfg, blk["norm1"], x)), aux
+    if kind == SLSTM:
+        return x + xlstm_lib.slstm_fwd(cfg, blk["slstm"],
+                                       norm(cfg, blk["norm1"], x)), aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / full-sequence scoring)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None,
+            mesh=None, return_hidden: bool = False):
+    """tokens: (B, S) int32.
+
+    prefix_embeds: VLM stub patch embeddings (B, n_prefix, D) prepended.
+    enc_frames: whisper stub frame embeddings (B, n_ctx, d_enc).
+    Returns (logits, aux_loss[, hidden]).
+    """
+    x = embed(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None]
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(cfg, params["encoder"], enc_frames, mesh)
+        x = x + params["dec_pos"].astype(x.dtype)[None, :S]
+    x = _constrain(cfg, mesh, x)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for (kind, count), seg in zip(segments_of(cfg), params["segments"]):
+        if kind == SHARED_ATTN:
+            x, aux = _block_fwd_full(cfg, kind, params["shared"], x, positions,
+                                     enc_out, mesh)
+            aux_total = aux_total + aux
+            continue
+
+        def body(x, blk, kind=kind):
+            return _block_fwd_full(cfg, kind, blk, x, positions, enc_out, mesh)
+
+        x, auxs = _run_segment(cfg, seg, x, body, mesh)
+        if auxs is not None:
+            aux_total = aux_total + jnp.sum(auxs)
+
+    x = norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    if mesh is not None:
+        logits = shd.constraint(logits, mesh,
+                                (shd.batch_axes(mesh), None, "model"))
+    if return_hidden:
+        return logits, aux_total, x
+    return logits, aux_total
+
+
+def predict_length(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    """PICE response-length head: mean-pooled hidden -> bucket logits."""
+    pooled = jnp.mean(hidden.astype(jnp.float32), axis=1)
+    return pooled @ params["length_head"].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Cache init / specs
+# ---------------------------------------------------------------------------
+
+def _seg_cache(cfg: ModelConfig, kind: str, count: int, batch: int,
+               max_len: int, spec: bool):
+    hd = cfg.resolved_head_dim
+    adt = jnp.dtype(cfg.dtype)
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if spec else (
+        lambda sh, dt: jnp.zeros(sh, dt))
+    if kind in (ATTN, MOE, SHARED_ATTN):
+        w = cfg.sliding_window
+        size = w if w else max_len
+        c = {"k": mk((count, batch, size, cfg.n_kv_heads, hd), adt),
+             "v": mk((count, batch, size, cfg.n_kv_heads, hd), adt)}
+        if cfg.family == "encdec":
+            c["cross_k"] = mk((count, batch, cfg.encoder.n_ctx, cfg.n_kv_heads, hd), adt)
+            c["cross_v"] = mk((count, batch, cfg.encoder.n_ctx, cfg.n_kv_heads, hd), adt)
+        return c
+    if kind == MAMBA2:
+        inner, H, P, N = ssm_lib.ssm_dims(cfg)
+        return {"conv": mk((count, batch, cfg.ssm_conv - 1, inner), adt),
+                "ssd": mk((count, batch, H, P, N), jnp.float32)}
+    if kind == MLSTM:
+        inner, H, hdm = xlstm_lib.mlstm_dims(cfg)
+        return {"C": mk((count, batch, H, hdm, hdm), jnp.float32),
+                "n": mk((count, batch, H, hdm), jnp.float32),
+                "m": mk((count, batch, H), jnp.float32)}
+    if kind == SLSTM:
+        d = cfg.d_model
+        return {k: mk((count, batch, d), jnp.float32) for k in ("h", "c", "n", "m")}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, spec: bool = False) -> dict:
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if spec else (
+        lambda sh, dt: jnp.zeros(sh, dt))
+    return {
+        "lengths": mk((batch,), jnp.int32),
+        "segments": [
+            _seg_cache(cfg, kind, count, batch, max_len, spec)
+            for kind, count in segments_of(cfg)
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None,
+            prompt_lengths: Optional[jax.Array] = None,
+            mesh=None) -> Tuple[jax.Array, dict]:
+    """Process the prompt, fill the cache, return last-position logits.
+
+    tokens: (B, S) right-padded to S; prompt_lengths: (B,) actual lengths
+    (defaults to S).
+    """
+    x = embed(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if prompt_lengths is None:
+        prompt_lengths = jnp.full((B,), S, jnp.int32)
+    elif prefix_embeds is not None:
+        prompt_lengths = prompt_lengths + prefix_embeds.shape[1]
+    positions = jnp.arange(S)[None]
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(cfg, params["encoder"], enc_frames, mesh)
+        x = x + params["dec_pos"].astype(x.dtype)[None, :S]
+    x = _constrain(cfg, mesh, x)
+
+    new_segs = []
+    for (kind, count), seg, segc in zip(segments_of(cfg), params["segments"],
+                                        cache["segments"]):
+        if kind == SHARED_ATTN:
+            x, newc = _prefill_block(cfg, kind, params["shared"],
+                                     jax.tree.map(lambda a: a[0], segc), x,
+                                     positions, prompt_lengths, enc_out, mesh)
+            newc = jax.tree.map(lambda a: a[None], newc)
+        else:
+            def scan_body(x, inp, kind=kind):
+                blk, c = inp
+                x = _constrain(cfg, mesh, x)
+                x, newc = _prefill_block(cfg, kind, blk, c, x, positions,
+                                         prompt_lengths, enc_out, mesh)
+                return x, newc
+            x, newc = _scan_or_unroll(cfg, scan_body, x, (seg, segc))
+        new_segs.append(newc)
+
+    x = norm(cfg, params["final_norm"], x)
+    # logits at the last real token of each prompt
+    idx = jnp.clip(prompt_lengths - 1, 0, S - 1)
+    last_h = jax.vmap(lambda h, i: h[i])(x, idx)
+    logits = unembed(cfg, params["embed"], last_h[:, None])[:, 0]
+    new_cache = {"lengths": prompt_lengths, "segments": new_segs}
+    return logits, new_cache
+
+
+def _prefill_block(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,
+                   positions, prompt_lengths, enc_out, mesh=None):
+    """Full-sequence pass that also produces the cache entry for this layer."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if kind in (ATTN, MOE, SHARED_ATTN):
+        xin = norm(cfg, blk["norm1"], x)
+        q, k, v = attn_lib._project_qkv(cfg, blk["attn"], xin)
+        if cfg.use_rope:
+            q = attn_lib.apply_rope(q, positions, cfg.rope_theta)
+            k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+        kf = attn_lib._repeat_kv(k, cfg.q_per_kv)
+        vf = attn_lib._repeat_kv(v, cfg.q_per_kv)
+        h = attn_lib.full_or_chunked_sdpa(
+            q, kf, vf, causal=True, window=cfg.sliding_window,
+            kv_lengths=prompt_lengths, softcap=cfg.attn_logit_softcap)
+        h = jnp.einsum("bsnh,nhd->bsd", h, blk["attn"]["wo"].astype(x.dtype))
+        x = x + h
+        newc = dict(c)
+        if cfg.sliding_window:
+            w = cfg.sliding_window
+            # keep the last `w` positions (assumes S >= w or pads zeros)
+            if S >= w:
+                newc["k"], newc["v"] = k[:, S - w:], v[:, S - w:]
+                # ring layout: slot = pos % w
+                roll = (-(S % w)) % w
+                newc["k"] = jnp.roll(newc["k"], -roll, axis=1)
+                newc["v"] = jnp.roll(newc["v"], -roll, axis=1)
+            else:
+                pad_k = jnp.zeros((B, w - S, cfg.n_kv_heads, hd), k.dtype)
+                newc["k"] = jnp.concatenate([k, pad_k], axis=1)
+                newc["v"] = jnp.concatenate([v, pad_k], axis=1)
+        else:
+            newc["k"] = jnp.zeros_like(c["k"]).at[:, :S].set(k)
+            newc["v"] = jnp.zeros_like(c["v"]).at[:, :S].set(v)
+        if enc_out is not None and "xattn" in blk:
+            xin2 = norm(cfg, blk["norm_x"], x)
+            _, ck, cv = attn_lib._project_qkv(cfg, blk["xattn"], xin2,
+                                              kv_x=enc_out)
+            newc["cross_k"], newc["cross_v"] = ck, cv
+            x = x + attn_lib.cross_attention_cached(cfg, blk["xattn"], xin2, ck, cv)
+        if kind == MOE:
+            h, _ = moe_lib.moe_fwd(cfg, blk["moe"], norm(cfg, blk["norm2"], x),
+                                   mesh=mesh)
+        else:
+            h = mlp(cfg, blk["mlp"], norm(cfg, blk["norm2"], x))
+        return x + h, newc
+    if kind == MAMBA2:
+        out, conv_s, ssd_s = ssm_lib.mamba2_fwd(
+            cfg, blk["mamba"], norm(cfg, blk["norm1"], x), return_state=True)
+        return x + out, {"conv": conv_s.astype(c["conv"].dtype), "ssd": ssd_s}
+    if kind == MLSTM:
+        out, st = xlstm_lib.mlstm_fwd(cfg, blk["mlstm"],
+                                      norm(cfg, blk["norm1"], x),
+                                      return_state=True)
+        return x + out, st
+    if kind == SLSTM:
+        out, st = xlstm_lib.slstm_fwd(cfg, blk["slstm"],
+                                      norm(cfg, blk["norm1"], x),
+                                      return_state=True)
+        return x + out, st
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict,
+                mesh=None) -> Tuple[jax.Array, dict]:
+    """tokens: (B, 1) -> (logits (B, vocab), updated cache)."""
+    x = embed(cfg, params["embed"], tokens)
+    lengths = cache["lengths"]
+    if cfg.family == "encdec":
+        pos = jnp.clip(lengths, 0, cfg.max_seq_len - 1)
+        x = x + params["dec_pos"].astype(x.dtype)[pos][:, None]
+    x = _constrain(cfg, mesh, x)
+
+    new_segs = []
+    for (kind, count), seg, segc in zip(segments_of(cfg), params["segments"],
+                                        cache["segments"]):
+        if kind == SHARED_ATTN:
+            x, newc = _decode_block(cfg, kind, params["shared"],
+                                    jax.tree.map(lambda a: a[0], segc), x,
+                                    lengths, mesh)
+            newc = jax.tree.map(lambda a: a[None], newc)
+        else:
+            def scan_body(x, inp, kind=kind):
+                blk, c = inp
+                x = _constrain(cfg, mesh, x)
+                x, newc = _decode_block(cfg, kind, blk, c, x, lengths, mesh)
+                return x, newc
+            x, newc = _scan_or_unroll(cfg, scan_body, x, (seg, segc))
+        new_segs.append(newc)
+
+    x = norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)[:, 0]
+    if mesh is not None:
+        logits = shd.constraint(logits, mesh, (shd.batch_axes(mesh), "model"))
+    new_cache = {"lengths": lengths + 1, "segments": new_segs}
+    return logits, new_cache
+
+
+def _decode_block(cfg: ModelConfig, kind: str, blk: dict, c: dict, x, lengths,
+                  mesh=None):
+    if kind in (ATTN, MOE, SHARED_ATTN):
+        xin = norm(cfg, blk["norm1"], x)
+        h, nk, nv = attn_lib.attention_decode(cfg, blk["attn"], xin, c["k"],
+                                              c["v"], lengths,
+                                              window=cfg.sliding_window)
+        x = x + h
+        newc = dict(c)
+        newc["k"], newc["v"] = nk, nv
+        if "cross_k" in c and "xattn" in blk:
+            xin2 = norm(cfg, blk["norm_x"], x)
+            x = x + attn_lib.cross_attention_cached(cfg, blk["xattn"], xin2,
+                                                    c["cross_k"], c["cross_v"])
+        if kind == MOE:
+            h, _ = moe_lib.moe_fwd(cfg, blk["moe"], norm(cfg, blk["norm2"], x),
+                                   mesh=mesh)
+        else:
+            h = mlp(cfg, blk["mlp"], norm(cfg, blk["norm2"], x))
+        return x + h, newc
+    if kind == MAMBA2:
+        out, conv_s, ssd_s = ssm_lib.mamba2_decode(
+            cfg, blk["mamba"], norm(cfg, blk["norm1"], x),
+            c["conv"], c["ssd"])
+        return x + out, {"conv": conv_s.astype(c["conv"].dtype), "ssd": ssd_s}
+    if kind == MLSTM:
+        out, st = xlstm_lib.mlstm_decode(cfg, blk["mlstm"],
+                                         norm(cfg, blk["norm1"], x), c)
+        return x + out, st
+    if kind == SLSTM:
+        out, st = xlstm_lib.slstm_decode(cfg, blk["slstm"],
+                                         norm(cfg, blk["norm1"], x), c)
+        return x + out, st
+    raise ValueError(kind)

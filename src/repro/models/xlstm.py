@@ -1,0 +1,256 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory with recurrent gate connections).
+
+mLSTM recurrence (per head, stabilized exponential gating):
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    C_t = f~_t C_{t-1} + i~_t v_t k_t^T      (matrix memory, dk x dv)
+    n_t = f~_t n_{t-1} + i~_t k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, 1)
+Training/prefill uses a chunkwise-parallel form (intra-chunk quasi-attention +
+inter-chunk state carry); decode uses the O(1) recurrent step.
+
+sLSTM keeps per-unit scalar memory with recurrent weights R, so it must scan
+over time in all modes (the paper notes it is not parallelizable).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    inner = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = inner // H
+    return inner, H, hd
+
+
+def init_mlstm(cfg: ModelConfig, key) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    inner, H, hd = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * inner), dtype=pd),       # x_m | z
+        "wq": dense_init(ks[1], (inner, inner), dtype=pd),
+        "wk": dense_init(ks[2], (inner, inner), dtype=pd),
+        "wv": dense_init(ks[3], (inner, inner), dtype=pd),
+        "w_if": dense_init(ks[4], (inner, 2 * H), dtype=pd),       # i,f gate logits
+        "b_i": jnp.zeros((H,), pd),
+        "b_f": jnp.full((H,), 3.0, pd),                            # forget-bias init
+        "norm_scale": jnp.ones((inner,), pd),
+        "w_down": dense_init(ks[5], (inner, d), dtype=pd),
+    }
+
+
+def _mlstm_gates(params, xm, H):
+    g = (xm @ params["w_if"].astype(xm.dtype)).astype(jnp.float32)
+    log_i = g[..., :H] + params["b_i"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(g[..., H:] + params["b_f"].astype(jnp.float32))
+    return log_i, log_f
+
+
+def mlstm_fwd(cfg: ModelConfig, params: dict, u: jax.Array,
+              state: Optional[dict] = None, return_state: bool = False):
+    """Full-sequence chunkwise-parallel mLSTM. u: (B,S,D)."""
+    dt_ = u.dtype
+    B, S, D = u.shape
+    inner, H, hd = mlstm_dims(cfg)
+    up = u @ params["w_up"].astype(dt_)
+    xm, z = up[..., :inner], up[..., inner:]
+    q = (xm @ params["wq"].astype(dt_)).reshape(B, S, H, hd)
+    k = (xm @ params["wk"].astype(dt_)).reshape(B, S, H, hd)
+    v = (xm @ params["wv"].astype(dt_)).reshape(B, S, H, hd)
+    log_i, log_f = _mlstm_gates(params, xm, H)                 # (B,S,H)
+
+    Q = cfg.ssm_chunk or 256
+    Q = min(Q, S)
+    while S % Q:
+        Q //= 2
+    nC = S // Q
+    qf = q.astype(jnp.float32).reshape(B, nC, Q, H, hd) / jnp.sqrt(float(hd))
+    kf = k.astype(jnp.float32).reshape(B, nC, Q, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, nC, Q, H, hd)
+    li = log_i.reshape(B, nC, Q, H)
+    lf = log_f.reshape(B, nC, Q, H)
+
+    csum_f = jnp.cumsum(lf, axis=2)                            # within-chunk cumsum
+    total_f = csum_f[:, :, -1]                                 # (B,nC,H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, lic, csumf, totf = inp                     # leading dim B
+        # decay from chunk start to position t (state path) with stabilizer m
+        log_a = csumf + m[:, None, :]                          # (B,Q,H)
+        # intra-chunk pair decays: D[t,s] = sum_{s<r<=t} lf_r + li_s  (s<=t)
+        dcum = csumf[:, :, None, :] - csumf[:, None, :, :]     # (B,Q,Q,H) t,s
+        Dmat = dcum + lic[:, None, :, :]                       # add log_i at s
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        Dmat = jnp.where(tri[None, :, :, None], Dmat, -jnp.inf)
+        m_intra = jnp.max(Dmat, axis=2)                        # (B,Q,H)
+        m_new = jnp.maximum(log_a, m_intra)                    # running stabilizer
+        # state contribution
+        sa = jnp.exp(log_a - m_new)                            # (B,Q,H)
+        h_state = jnp.einsum("bqhk,bhkv->bqhv", qc, C) * sa[..., None]
+        n_state = jnp.einsum("bqhk,bhk->bqh", qc, n) * sa
+        # intra contribution
+        w = jnp.exp(Dmat - m_new[:, :, None, :])               # (B,Q,Q,H)
+        scores = jnp.einsum("bqhk,bshk->bqsh", qc, kc) * w
+        h_intra = jnp.einsum("bqsh,bshv->bqhv", scores, vc)
+        n_intra = jnp.sum(scores, axis=2)                      # (B,Q,H)
+        h_num = h_state + h_intra
+        n_tot = n_state + n_intra
+        denom = jnp.maximum(jnp.abs(n_tot), jnp.exp(-m_new))
+        h = h_num / denom[..., None]                           # (B,Q,H,hd)
+        # carry update to end of chunk
+        m_end = jnp.maximum(totf + m, jnp.max(lic + (totf[:, None] - csumf), axis=1))
+        decay_state = jnp.exp(totf + m - m_end)                # (B,H)
+        kw = jnp.exp(lic + (totf[:, None] - csumf) - m_end[:, None])  # (B,Q,H)
+        C_new = C * decay_state[..., None, None] + jnp.einsum(
+            "bshk,bshv->bhkv", kc * kw[..., None], vc)
+        n_new = n * decay_state[..., None] + jnp.einsum("bshk,bsh->bhk", kc, kw)
+        return (C_new, n_new, m_end), h
+
+    inputs = (
+        jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0),
+        jnp.moveaxis(li, 1, 0), jnp.moveaxis(csum_f, 1, 0), jnp.moveaxis(total_f, 1, 0),
+    )
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0), inputs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, inner).astype(dt_)
+    h = rmsnorm(h, params["norm_scale"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ params["w_down"].astype(dt_)
+    if return_state:
+        return out, {"C": Cf, "n": nf, "m": mf}
+    return out
+
+
+def mlstm_decode(cfg: ModelConfig, params: dict, u: jax.Array, state: dict):
+    """O(1) recurrent step. u: (B,1,D); state {C (B,H,hd,hd), n, m}."""
+    dt_ = u.dtype
+    B = u.shape[0]
+    inner, H, hd = mlstm_dims(cfg)
+    up = u @ params["w_up"].astype(dt_)
+    xm, z = up[..., :inner], up[..., inner:]
+    q = (xm @ params["wq"].astype(dt_)).reshape(B, H, hd).astype(jnp.float32)
+    k = (xm @ params["wk"].astype(dt_)).reshape(B, H, hd).astype(jnp.float32)
+    v = (xm @ params["wv"].astype(dt_)).reshape(B, H, hd).astype(jnp.float32)
+    q = q / jnp.sqrt(float(hd))
+    log_i, log_f = _mlstm_gates(params, xm[:, 0], H)           # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    fs = jnp.exp(log_f + m - m_new)
+    is_ = jnp.exp(log_i - m_new)
+    C = C * fs[..., None, None] + is_[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = n * fs[..., None] + is_[..., None] * k
+    h_num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
+    h = (h_num / denom[..., None]).reshape(B, 1, inner).astype(dt_)
+    h = rmsnorm(h, params["norm_scale"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ params["w_down"].astype(dt_)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    inner, H, hd = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg: ModelConfig, key) -> dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ff = max(1, (4 * d) // 3)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), dtype=pd),        # i,f,z,o
+        "r_gates": dense_init(ks[1], (d, 4 * d), dtype=pd),        # recurrent
+        "b_gates": jnp.concatenate([
+            jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]).astype(pd),
+        "norm_scale": jnp.ones((d,), pd),
+        "w_ff_gate": dense_init(ks[2], (d, ff), dtype=pd),
+        "w_ff_up": dense_init(ks[3], (d, ff), dtype=pd),
+        "w_ff_down": dense_init(ks[4], (ff, d), dtype=pd),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": z - 1e30}
+
+
+def _slstm_step(cfg: ModelConfig, params: dict, x_t: jax.Array, st: dict):
+    """x_t: (B, 4*d) pre-projected input gates. Returns (new_state, h_out)."""
+    d = cfg.d_model
+    rec = (st["h"].astype(jnp.float32) @ params["r_gates"].astype(jnp.float32))
+    g = x_t.astype(jnp.float32) + rec + params["b_gates"].astype(jnp.float32)
+    gi, gf, gz, go = g[:, :d], g[:, d:2 * d], g[:, 2 * d:3 * d], g[:, 3 * d:]
+    log_i = gi
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    i_ = jnp.exp(log_i - m_new)
+    f_ = jnp.exp(log_f + st["m"] - m_new)
+    c = f_ * st["c"] + i_ * jnp.tanh(gz)
+    n = f_ * st["n"] + i_
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}, h
+
+
+def slstm_fwd(cfg: ModelConfig, params: dict, u: jax.Array,
+              state: Optional[dict] = None, return_state: bool = False):
+    """u: (B,S,D). Scans over time (sLSTM is inherently sequential)."""
+    dt_ = u.dtype
+    B, S, d = u.shape
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    xg = u @ params["w_gates"].astype(dt_)                     # (B,S,4d)
+
+    def step(st, x_t):
+        st2, h = _slstm_step(cfg, params, x_t, st)
+        return st2, h
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(dt_)                     # (B,S,d)
+    h = rmsnorm(h, params["norm_scale"], cfg.norm_eps)
+    # gated FFN (proj factor 4/3 per xLSTM)
+    gate = h @ params["w_ff_gate"].astype(dt_)
+    upv = h @ params["w_ff_up"].astype(dt_)
+    out = (jax.nn.gelu(gate) * upv) @ params["w_ff_down"].astype(dt_)
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_decode(cfg: ModelConfig, params: dict, u: jax.Array, state: dict):
+    """u: (B,1,D)."""
+    dt_ = u.dtype
+    xg = (u[:, 0] @ params["w_gates"].astype(dt_))
+    st2, h = _slstm_step(cfg, params, xg, state)
+    h = rmsnorm(h.astype(dt_)[:, None], params["norm_scale"], cfg.norm_eps)
+    gate = h @ params["w_ff_gate"].astype(dt_)
+    upv = h @ params["w_ff_up"].astype(dt_)
+    out = (jax.nn.gelu(gate) * upv) @ params["w_ff_down"].astype(dt_)
+    return out, st2

@@ -1,0 +1,183 @@
+"""Real-compute inference engine: jitted prefill/decode with continuous
+batching (Orca-style slot recycling) over a shared multi-slot KV cache.
+
+This is the engine the examples and real-compute benchmarks run on CPU with
+tiny models; on TPU the same code serves the full configs (the dry-run proves
+the sharded lowering). Prompt lengths are bucketed to powers of two to bound
+jit recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serving.sampler import SamplerConfig, sample, token_logprob
+
+
+def _bucket(n: int, lo: int = 32) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class Slot:
+    req_id: int = -1
+    active: bool = False
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    max_new: int = 0
+    generated: int = 0
+
+
+class InferenceEngine:
+    """Continuous-batching engine for one model."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 1024, sampler: SamplerConfig = SamplerConfig(),
+                 eos_id: int = 0, name: str = "engine"):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.sampler = sampler
+        self.eos_id = eos_id
+        self.name = name
+        self.slots = [Slot() for _ in range(max_batch)]
+        self.cache = transformer.init_cache(cfg, max_batch, max_len)
+        self.key = jax.random.PRNGKey(0)
+        self.tokens_generated = 0
+        self.busy_s = 0.0
+
+        self._decode = jax.jit(
+            lambda p, t, c: transformer.decode_step(cfg, p, t, c))
+        self._prefill = jax.jit(
+            lambda p, t, c, l: transformer.prefill(cfg, p, t, c,
+                                                   prompt_lengths=l))
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._score = jax.jit(self._score_impl)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _insert_impl(big, one, slot):
+        """Insert a batch-1 cache into slot `slot` of the big cache.
+        Cache layout: lengths (B,); segment leaves (L, B, ...) — batch axis 1."""
+        out = {"lengths": jax.lax.dynamic_update_slice(
+            big["lengths"], one["lengths"].astype(big["lengths"].dtype), (slot,))}
+        segs = []
+        for bseg, oseg in zip(big["segments"], one["segments"]):
+            seg = {}
+            for k in bseg:
+                idx = (0, slot) + (0,) * (bseg[k].ndim - 2)
+                seg[k] = jax.lax.dynamic_update_slice(
+                    bseg[k], oseg[k].astype(bseg[k].dtype), idx)
+            segs.append(seg)
+        out["segments"] = segs
+        return out
+
+    def _score_impl(self, params, tokens):
+        """Teacher-forced mean logprob of tokens[1:] given tokens[:-1]."""
+        logits, _ = transformer.forward(self.cfg, params, tokens[None, :-1])
+        logp = jax.nn.log_softmax(logits[0].astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logp, tokens[1:][:, None], axis=-1)[:, 0]
+        return jnp.mean(gold), gold
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def add_request(self, req_id: int, prompt: List[int], max_new: int) -> int:
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slot")
+        slot = free[0]
+        t0 = time.perf_counter()
+        S = _bucket(len(prompt))
+        S = min(S, self.max_len)
+        padded = np.zeros((1, S), np.int32)
+        toks = prompt[-S:]
+        padded[0, :len(toks)] = toks
+        one_cache = transformer.init_cache(self.cfg, 1, self.max_len)
+        logits, one_cache = self._prefill(
+            self.params, jnp.asarray(padded), one_cache,
+            jnp.asarray([len(toks)], jnp.int32))
+        self.cache = self._insert(self.cache, one_cache, slot)
+        s = self.slots[slot]
+        s.req_id, s.active = req_id, True
+        s.tokens, s.logprobs = [], []
+        s.max_new, s.generated = max_new, 0
+        # sample the first token from prefill logits
+        self.key, sub = jax.random.split(self.key)
+        tok = sample(logits, sub, self.sampler)
+        lp = token_logprob(logits, tok)
+        self._commit(slot, int(tok[0]), float(lp[0]))
+        self.busy_s += time.perf_counter() - t0
+        return slot
+
+    def _commit(self, slot: int, tok: int, lp: float):
+        s = self.slots[slot]
+        s.tokens.append(tok)
+        s.logprobs.append(lp)
+        s.generated += 1
+        self.tokens_generated += 1
+        if tok == self.eos_id or s.generated >= s.max_new:
+            s.active = False
+
+    def step(self) -> bool:
+        """One decode step for all active slots. Returns True if work done."""
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if not active:
+            return False
+        t0 = time.perf_counter()
+        last = np.zeros((self.max_batch, 1), np.int32)
+        for i, s in enumerate(self.slots):
+            last[i, 0] = s.tokens[-1] if s.tokens else 0
+        logits, self.cache = self._decode(self.params, jnp.asarray(last),
+                                          self.cache)
+        self.key, sub = jax.random.split(self.key)
+        toks = np.asarray(sample(logits, sub, self.sampler))
+        lps = np.asarray(token_logprob(logits, jnp.asarray(toks)))
+        for i in active:
+            self._commit(i, int(toks[i]), float(lps[i]))
+        self.busy_s += time.perf_counter() - t0
+        return True
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts: List[List[int]], max_new: int = 128
+                 ) -> List[Tuple[List[int], List[float]]]:
+        """Batch-generate; returns (tokens, logprobs) per prompt."""
+        results: Dict[int, Tuple[List[int], List[float]]] = {}
+        pending = list(enumerate(prompts))
+        submitted: Dict[int, int] = {}          # req_id -> slot
+        while pending or any(s.active for s in self.slots):
+            while pending and self.free_slots():
+                rid, prompt = pending.pop(0)
+                slot = self.add_request(rid, prompt, max_new)
+                submitted[rid] = slot
+            if not self.step():
+                pass
+            done = [rid for rid, sl in submitted.items()
+                    if not self.slots[sl].active]
+            for rid in done:
+                sl = submitted.pop(rid)
+                s = self.slots[sl]
+                results[rid] = (list(s.tokens), list(s.logprobs))
+                s.req_id = -1
+        return [results[i] for i in range(len(prompts))]
+
+    def score(self, tokens: List[int]) -> Tuple[float, np.ndarray]:
+        """Mean token logprob of a sequence under this model (perplexity)."""
+        S = _bucket(len(tokens))
+        arr = np.full((S,), self.eos_id, np.int32)
+        arr[:len(tokens)] = tokens
+        mean_lp, gold = self._score(self.params, jnp.asarray(arr))
+        gold = np.asarray(gold)[:max(len(tokens) - 1, 1)]
+        return float(np.mean(gold)), gold

@@ -1,0 +1,28 @@
+"""Cloud <-> edge network transmission model Δ(r).
+
+The paper transmits only queries and sketches ("a few tens of milliseconds
+even at lower bandwidths" — Fig. 14); we model Δ(r) = rtt + bytes/bandwidth
+with optional jitter, used both by the scheduler's Eq.(2) check and by the
+event-driven simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    bandwidth_mbps: float = 100.0
+    rtt_s: float = 0.02
+    jitter_frac: float = 0.0
+    bytes_per_token: float = 4.0
+    _rng: random.Random = dataclasses.field(
+        default_factory=lambda: random.Random(0))
+
+    def delay_s(self, n_tokens: int) -> float:
+        bytes_ = n_tokens * self.bytes_per_token
+        base = self.rtt_s + bytes_ * 8 / (self.bandwidth_mbps * 1e6)
+        if self.jitter_frac:
+            base *= 1.0 + self._rng.uniform(-self.jitter_frac, self.jitter_frac)
+        return base

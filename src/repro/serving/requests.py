@@ -1,0 +1,58 @@
+"""Request/response types and SLA specs for the serving layer."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class SLA:
+    """Multi-criteria service-level agreement (paper §IV-A-1).
+
+    `metric_order` ranks the soft objectives for the lexicographic
+    formulation; `max_latency_s` is the hard constraint (Eq. 2 RHS uses the
+    cloud-only latency when None).
+    """
+    max_latency_s: Optional[float] = None
+    metric_order: tuple = ("error", "throughput", "latency",
+                           "server_cost", "edge_cost")
+
+
+@dataclasses.dataclass
+class Request:
+    query: str
+    req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    arrival_s: float = 0.0
+    category: str = "generic"
+    sla: SLA = dataclasses.field(default_factory=SLA)
+    max_new_tokens: int = 512
+
+
+@dataclasses.dataclass
+class SketchTask:
+    """An expansion task queued for the edge fleet (paper's job queue Q)."""
+    req_id: int
+    query: str
+    sketch: str
+    sentences: List[str]
+    expected_length: int          # l_i — LLM-predicted response length
+    sketch_tokens: int            # |r_i|
+    created_s: float = 0.0
+
+
+@dataclasses.dataclass
+class Response:
+    req_id: int
+    text: str
+    mode: str                     # "cloud_full" | "progressive"
+    cloud_tokens: int = 0
+    edge_tokens: int = 0
+    latency_s: float = 0.0
+    queue_wait_s: float = 0.0
+    network_s: float = 0.0
+    confidence: float = 0.0
+    model_used: str = ""
+    quality: Optional[float] = None

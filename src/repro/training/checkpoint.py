@@ -1,0 +1,74 @@
+"""Checkpointing: numpy-archive pytree serialization (no external deps).
+
+Layout: <dir>/<step>/arrays.npz + tree.json (structure with leaf indices).
+Works for params, optimizer state, or any array pytree; restores exact
+dtypes/shapes and validates against a template when given.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> tuple:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    path = Path(ckpt_dir) / str(step)
+    path.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        dtypes[str(i)] = str(a.dtype)
+        if a.dtype.kind not in "biufc":      # ml_dtypes (bfloat16 etc.)
+            a = a.view(np.uint16) if a.dtype.itemsize == 2 else a.view(np.uint8)
+        arrays[f"leaf_{i}"] = a
+    np.savez(path / "arrays.npz", **arrays)
+    (path / "tree.json").write_text(json.dumps({
+        "treedef": str(treedef), "n_leaves": len(leaves), "step": step,
+        "dtypes": dtypes}))
+    return str(path)
+
+
+def restore(ckpt_dir: str, step: Optional[int], template: Any) -> Any:
+    base = Path(ckpt_dir)
+    if step is None:
+        steps = sorted((int(p.name) for p in base.iterdir()
+                        if p.name.isdigit()), reverse=True)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+        step = steps[0]
+    path = base / str(step)
+    data = np.load(path / "arrays.npz")
+    meta = json.loads((path / "tree.json").read_text())
+    dtypes = meta.get("dtypes", {})
+    leaves, treedef = _flatten(template)
+    out = []
+    for i, tpl in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        saved_dt = dtypes.get(str(i))
+        if saved_dt and str(arr.dtype) != saved_dt:
+            import ml_dtypes  # packaged with jax
+            arr = arr.view(np.dtype(getattr(ml_dtypes, saved_dt, saved_dt)))
+        if hasattr(tpl, "shape") and tuple(arr.shape) != tuple(tpl.shape):
+            raise ValueError(f"leaf {i}: checkpoint shape {arr.shape} != "
+                             f"template {tpl.shape}")
+        out.append(jnp.asarray(arr, dtype=getattr(tpl, "dtype", arr.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    base = Path(ckpt_dir)
+    if not base.exists():
+        return None
+    steps = [int(p.name) for p in base.iterdir() if p.name.isdigit()]
+    return max(steps) if steps else None

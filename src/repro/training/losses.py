@@ -1,0 +1,61 @@
+"""Training losses."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# When > 0, cross_entropy processes the sequence in blocks of this many
+# positions via lax.map, so the f32-upcast logits tensor is never
+# materialized at (B, S, V) — a §Perf memory-term optimization for
+# large-vocab training (set via launch/dryrun --chunked-ce).
+CHUNKED_CE_BLOCK = 0
+
+
+def _ce_terms(logits, targets):
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: Optional[jax.Array] = None):
+    """logits: (B,S,V) -> mean NLL over unmasked positions.
+
+    Returns (loss, n_tokens). Computed in f32 with logsumexp stability.
+    """
+    S = logits.shape[1]
+    blk = CHUNKED_CE_BLOCK
+    if blk and S > blk and S % blk == 0:
+        nb = S // blk
+
+        def block(i):
+            lg = jax.lax.dynamic_slice_in_dim(logits, i * blk, blk, axis=1)
+            tg = jax.lax.dynamic_slice_in_dim(targets, i * blk, blk, axis=1)
+            return _ce_terms(lg, tg)
+
+        nll = jnp.moveaxis(jax.lax.map(block, jnp.arange(nb)), 0, 1)
+        nll = nll.reshape(targets.shape)
+    else:
+        nll = _ce_terms(logits, targets)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / n, n
+
+
+def lm_loss(cfg: ModelConfig, logits: jax.Array, targets: jax.Array,
+            aux: jax.Array, mask: Optional[jax.Array] = None,
+            prefix_len: int = 0):
+    """Causal LM loss; drops `prefix_len` leading positions (VLM patch stub)."""
+    if prefix_len:
+        logits = logits[:, prefix_len:]
+    loss, n = cross_entropy(logits, targets, mask)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"nll": loss, "aux": aux, "tokens": n,
+                   "perplexity": jnp.exp(loss)}

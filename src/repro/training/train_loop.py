@@ -1,0 +1,68 @@
+"""Generic training loop over jitted train steps (single-host or pjit)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import steps as steps_lib
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt_lib
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt_state: opt_lib.OptState
+    step: int = 0
+
+
+def init_train_state(cfg: ModelConfig, seed: int = 0) -> TrainState:
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    return TrainState(params=params, opt_state=opt_lib.init_opt_state(params))
+
+
+def train(cfg: ModelConfig, state: TrainState, batches: Iterator,
+          opt_cfg: opt_lib.AdamWConfig, n_steps: int, mesh=None,
+          log_every: int = 20, log_fn: Callable = print,
+          masked: bool = False) -> TrainState:
+    """batches yields (tokens, targets) or (tokens, targets, mask)."""
+    if masked:
+        def step_fn(params, opt_state, batch):
+            def loss_fn(params):
+                logits, aux = transformer.forward(cfg, params, batch["tokens"],
+                                                  mesh=mesh)
+                from repro.training.losses import cross_entropy
+                loss, n = cross_entropy(logits, batch["targets"], batch["mask"])
+                return loss + cfg.router_aux_coef * aux, {"nll": loss}
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params, opt_state, om = opt_lib.adamw_update(opt_cfg, params, grads,
+                                                         opt_state)
+            return params, opt_state, dict(metrics, loss=loss, **om)
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        jit_step = jax.jit(steps_lib.make_train_step(cfg, opt_cfg, mesh=mesh),
+                           donate_argnums=(0, 1))
+
+    t0 = time.time()
+    for i in range(n_steps):
+        b = next(batches)
+        if masked:
+            batch = {"tokens": jnp.asarray(b[0]), "targets": jnp.asarray(b[1]),
+                     "mask": jnp.asarray(b[2])}
+        else:
+            batch = {"tokens": jnp.asarray(b[0]), "targets": jnp.asarray(b[1])}
+        state.params, state.opt_state, metrics = jit_step(
+            state.params, state.opt_state, batch)
+        state.step += 1
+        if (i + 1) % log_every == 0 or i == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            log_fn(f"step {state.step:5d} loss={m['loss']:.4f} "
+                   f"nll={m.get('nll', 0):.4f} "
+                   f"({(time.time()-t0)/(i+1):.3f}s/step)")
+    return state

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device (the 512-placeholder flag is ONLY
+# set inside repro.launch.dryrun, which tests run as a subprocess if at all).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

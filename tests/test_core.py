@@ -1,0 +1,224 @@
+"""Unit tests for the PICE core: scheduler Eq.(2), Algorithm 1/2, ensemble
+Eq.(3), execution optimizer, metrics, profiler."""
+import math
+
+import pytest
+
+from repro.core import metrics as M
+from repro.core.dispatch import MultiListQueue
+from repro.core.ensemble import Candidate, confidence, select_best
+from repro.core.exec_optimizer import merge_once, plan_expansion
+from repro.core.profiler import (LatencyModel, RuntimeMonitor,
+                                 cost_coefficient, fit_latency_model,
+                                 paper_latency_model)
+from repro.core.scheduler import (DynamicScheduler, EdgeModelInfo,
+                                  lexicographic_select, ScheduleDecision)
+from repro.core.selection import select_model
+from repro.serving.network import NetworkModel
+from repro.serving.requests import SketchTask
+
+
+def _edge(name, rate, cap):
+    return EdgeModelInfo(name=name, latency=LatencyModel(t0=0.5, rate=rate),
+                         capability=cap)
+
+
+def _sched(edges=None, n_dev=4):
+    cloud = LatencyModel(t0=0.5, rate=20.0)
+    edges = edges or [_edge("small", 25.0, 0.5), _edge("big", 10.0, 0.8)]
+    return DynamicScheduler(cloud, edges, NetworkModel(), n_dev)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_eq2_feasibility_monotone_in_sketch_len():
+    s = _sched()
+    e = s.edges["small"]
+    lats = [s.e2e_latency(sk, 500, e, 4) for sk in (50, 100, 200, 400)]
+    assert lats == sorted(lats), "longer sketches cannot reduce e2e latency"
+
+
+def test_scheduler_falls_back_to_cloud_when_edge_too_slow():
+    slow = [_edge("sloth", 0.5, 0.9)]
+    s = _sched(slow)
+    d = s.schedule(500)
+    assert d.mode == "cloud_full"
+
+
+def test_scheduler_progressive_when_feasible():
+    s = _sched()
+    d = s.schedule(500)
+    assert d.mode == "progressive"
+    assert 0 < d.sketch_tokens < 500
+    assert d.est_latency_s <= s.cloud.f(500) + 1e-6   # Eq.(2) hard constraint
+
+
+def test_scheduler_respects_capability_floor():
+    s = _sched()
+    d = s.schedule(500)
+    e = s.edges[d.edge_model]
+    assert d.sketch_tokens >= e.min_sketch_ratio * 500 - 1
+
+
+def test_scheduler_queue_backpressure():
+    s = _sched()
+    d0 = s.schedule(500)
+    s.monitor.queued_expected_tokens = 1e7     # enormous backlog
+    d1 = s.schedule(500)
+    assert d1.mode == "cloud_full", "backlogged edge must push work to cloud"
+    assert d0.mode == "progressive"
+
+
+def test_lexicographic_order_respected():
+    a = ScheduleDecision(mode="progressive",
+                         metrics={"error": 0.1, "latency": 10.0})
+    b = ScheduleDecision(mode="progressive",
+                         metrics={"error": 0.5, "latency": 1.0})
+    pick = lexicographic_select([a, b], ("error", "latency"))
+    assert pick is a
+    pick = lexicographic_select([a, b], ("latency", "error"))
+    assert pick is b
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: multi-list dispatch
+# ---------------------------------------------------------------------------
+
+def _task(l, rid=0):
+    return SketchTask(req_id=rid, query="", sketch="", sentences=["a"],
+                      expected_length=l, sketch_tokens=l // 3)
+
+
+def test_multilist_buckets_and_longest_first():
+    q = MultiListQueue(boundaries=(100, 200))
+    for i, l in enumerate([50, 60, 70, 150, 250]):
+        q.push(_task(l, i))
+    assert len(q) == 5
+    batch = q.pull_batch(8)
+    assert [t.expected_length for t in batch] == [50, 60, 70], \
+        "batch must come from the longest list (uniform short tasks)"
+    assert len(q) == 2
+
+
+def test_multilist_conservation():
+    q = MultiListQueue()
+    for i in range(20):
+        q.push(_task(10 * (i + 1), i))
+    seen = []
+    while len(q):
+        seen.extend(t.req_id for t in q.pull_batch(3))
+    assert sorted(seen) == list(range(20))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: model selection
+# ---------------------------------------------------------------------------
+
+def test_selection_downgrades_when_over_budget():
+    cloud = LatencyModel(t0=0.5, rate=20.0)
+    cands = [_edge("s", 50.0, 0.4), _edge("m", 10.0, 0.6), _edge("l", 2.0, 0.9)]
+    r = select_model("l", cands, expected_len=400, sketch_tokens=100,
+                     cloud=cloud, queue_len=10, queue_max=8)
+    assert r.action == "downgrade" and r.model in ("s", "m")
+
+
+def test_selection_upgrades_only_when_queue_short():
+    cloud = LatencyModel(t0=0.5, rate=20.0)
+    cands = [_edge("s", 50.0, 0.4), _edge("m", 30.0, 0.6), _edge("l", 28.0, 0.9)]
+    busy = select_model("s", cands, 400, 100, cloud, queue_len=10, queue_max=8)
+    idle = select_model("s", cands, 400, 100, cloud, queue_len=0, queue_max=8)
+    assert busy.action == "keep"
+    assert idle.action == "upgrade" and idle.model == "l"
+
+
+# ---------------------------------------------------------------------------
+# Eq.(3) ensemble confidence
+# ---------------------------------------------------------------------------
+
+def test_confidence_prefers_sketch_coverage():
+    sketch = "the system stores tokens. a network routes queries."
+    good = Candidate(text="the system stores tokens and a network routes "
+                          "queries at scale", mean_log2_prob=-2.0, n_tokens=14,
+                     model="a")
+    bad = Candidate(text="completely unrelated words here", mean_log2_prob=-2.0,
+                    n_tokens=14, model="b")
+    best, scores = select_best([good, bad], sketch)
+    assert best is good and scores[0] > scores[1]
+
+
+def test_confidence_perplexity_term():
+    cands = [Candidate("same text", -1.0, 10, "a"),
+             Candidate("same text", -8.0, 10, "b")]
+    best, _ = select_best(cands, "same text")
+    assert best.model == "a"
+
+
+def test_confidence_bounded():
+    c = Candidate("a b c", -3.0, 3, "m")
+    v = confidence(c, "a b c", [c])
+    assert 0.0 <= v <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# execution optimizer
+# ---------------------------------------------------------------------------
+
+def test_merge_once_pairs_longest_with_shortest():
+    groups = [["aaaa bbbb cccc dddd"], ["a"], ["aa bb"], ["aa bb cc"]]
+    merged = merge_once(groups)
+    assert len(merged) == 2
+    flat = sorted(s for g in merged for s in g)
+    assert flat == sorted(s for g in groups for s in g)
+    # the longest sentence must be paired with the shortest
+    for g in merged:
+        if "aaaa bbbb cccc dddd" in g:
+            assert "a" in g
+
+
+def test_plan_expansion_respects_budget():
+    sents = [f"sentence number {i} with words" for i in range(8)]
+    # infinite budget -> merges all the way down to 1 group
+    plan = plan_expansion(sents, lambda p, t: 0.01 * t, latency_budget_s=1e9)
+    assert plan.parallelism == 1
+    # zero budget -> keeps maximum parallelism (no merging possible)
+    plan = plan_expansion(sents, lambda p, t: 0.01 * t, latency_budget_s=0.0)
+    assert plan.parallelism == len(sents)
+
+
+def test_plan_expansion_preserves_sentences():
+    sents = [f"s{i} word" for i in range(7)]
+    plan = plan_expansion(sents, lambda p, t: 0.1, latency_budget_s=1.0,
+                          max_parallelism=4)
+    flat = sorted(s for g in plan.groups for s in g)
+    assert flat == sorted(sents)
+    assert plan.parallelism <= 4
+
+
+# ---------------------------------------------------------------------------
+# metrics / profiler
+# ---------------------------------------------------------------------------
+
+def test_rouge_bounds_and_identity():
+    p, r, f1 = M.rouge_1("a b c", "a b c")
+    assert p == r == f1 == 1.0
+    p, r, f1 = M.rouge_1("a b c", "x y z")
+    assert f1 == 0.0
+    _, _, f = M.rouge_l("the cat sat", "the cat quietly sat")
+    assert 0.0 < f <= 1.0
+
+
+def test_latency_fit_recovers_rate():
+    true = LatencyModel(t0=0.3, rate=50.0)
+    samples = [(l, true.f(l)) for l in (8, 16, 32, 64, 128)]
+    fit = fit_latency_model(samples)
+    assert abs(fit.rate - 50.0) / 50.0 < 0.01
+    assert abs(fit.t0 - 0.3) < 0.01
+
+
+def test_cost_coefficient_paper_tables():
+    cloud = paper_latency_model("llama3-70b", "cloud")
+    edge = paper_latency_model("llama3-8b", "edge")
+    c = cost_coefficient(cloud, edge)
+    assert c > 1.0, "fp16 8B on Orin is slower than 70B on A100 per token"

@@ -1,0 +1,68 @@
+"""Fine-tuning pipeline (§IV-D): preference labeling, reward model, RLAIF."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.pice_cloud_edge import TINY_EDGE_B
+from repro.data import corpus as corpus_lib
+from repro.finetune.preference import (PreferenceTriple, label_pair,
+                                       sketch_score)
+from repro.finetune.reward_model import (bt_loss, encode_pair,
+                                         init_reward_model, reward_fwd,
+                                         train_reward_model)
+
+
+def test_sketch_score_prefers_concise_faithful():
+    y = "in practice the system carefully stores tokens at scale for every user"
+    short_good = "the system stores tokens"
+    long_good = ("the system stores tokens and also many other words that add "
+                 "nothing at all to the content of this sketch")
+    s1 = sketch_score(short_good, y, y)
+    s2 = sketch_score(long_good, y, y)
+    assert s1 > s2, "shorter sketch with same fidelity must score higher"
+
+
+def test_label_pair_orders_by_score():
+    y = "in practice the model carefully predicts scores at scale"
+    t = label_pair("doc", y, "the model predicts scores",
+                   "zzz qqq unrelated words entirely",
+                   expand_fn=lambda x, r: r)    # identity expansion
+    assert t.r_w == "the model predicts scores"
+    assert t.score_w >= t.score_l
+
+
+@pytest.fixture(scope="module")
+def triples():
+    out = []
+    for ex in corpus_lib.corpus(64, seed=3):
+        # gold sketch vs a corrupted sketch: measurable preference signal
+        bad = " ".join(reversed(ex.answer.split()[:30]))
+        out.append(PreferenceTriple(x=ex.answer[:120], r_w=ex.sketch,
+                                    r_l=bad, score_w=1.0, score_l=0.0))
+    return out
+
+
+def test_reward_model_learns_preferences(triples):
+    cfg = TINY_EDGE_B.with_(dtype="float32")
+    params = train_reward_model(cfg, triples, n_steps=60, batch=8,
+                                seq_len=128, log_fn=lambda s: None)
+    tw = jnp.asarray(np.stack([encode_pair(t.x, t.r_w, 128)
+                               for t in triples[:32]]))
+    tl = jnp.asarray(np.stack([encode_pair(t.x, t.r_l, 128)
+                               for t in triples[:32]]))
+    rw = reward_fwd(cfg, params, tw)
+    rl = reward_fwd(cfg, params, tl)
+    acc = float(jnp.mean((rw > rl).astype(jnp.float32)))
+    assert acc >= 0.7, f"reward model pair accuracy {acc:.2f}"
+
+
+def test_bt_loss_gradient_direction(triples):
+    cfg = TINY_EDGE_B.with_(dtype="float32")
+    params = init_reward_model(cfg, seed=0)
+    tw = jnp.asarray(np.stack([encode_pair(t.x, t.r_w, 64)
+                               for t in triples[:8]]))
+    tl = jnp.asarray(np.stack([encode_pair(t.x, t.r_l, 64)
+                               for t in triples[:8]]))
+    loss, acc = bt_loss(cfg, params, tw, tl)
+    assert np.isfinite(float(loss)) and float(loss) > 0

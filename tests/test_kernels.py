@@ -1,0 +1,153 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention import ref as da_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rmsnorm import ops as rn_ops
+from repro.kernels.rmsnorm import ref as rn_ref
+from repro.kernels.ssm_scan import ops as ssm_ops
+from repro.kernels.ssm_scan import ref as ssm_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (2, 128, 4, 2, 32),
+    (1, 256, 8, 8, 64),
+    (2, 64, 4, 1, 16),
+    (1, 512, 2, 2, 128),
+])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, Hq, Hkv, hd, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    ref = fa_ref.mha_ref(q, k, v, causal=True, window=window)
+    out = fa_ops.flash_attention(q, k, v, causal=True, window=window,
+                                 block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 4, 32))
+    v = jax.random.normal(ks[2], (2, 128, 4, 32))
+    ref = fa_ref.mha_ref(q, k, v, causal=False)
+    out = fa_ops.flash_attention(q, k, v, causal=False, block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (2, 128, 4, 2, 32),
+    (3, 256, 8, 8, 64),
+    (1, 512, 4, 1, 16),
+    (2, 64, 16, 4, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, S, Hq, Hkv, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (B, 1, Hq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), dtype)
+    lens = jax.random.randint(ks[3], (B,), 1, S + 1)
+    ref = da_ref.decode_attention_ref(q, k, v, lens)
+    out = da_ops.decode_attention(q, k, v, lens, block_s=64)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_ragged_lengths():
+    """Entries past `lengths` must not influence the output."""
+    B, S, H, hd = 2, 128, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    lens = jnp.array([40, 100])
+    out1 = da_ops.decode_attention(q, k, v, lens, block_s=32)
+    k2 = k.at[0, 40:].set(99.0)
+    v2 = v.at[0, 40:].set(-99.0)
+    out2 = da_ops.decode_attention(q, k2, v2, lens, block_s=32)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 37, 256), (1, 8, 8, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    s = jax.random.normal(ks[1], (shape[-1],))
+    ref = rn_ref.rmsnorm_ref(x, s)
+    out = rn_ops.rmsnorm(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Bb,S,H,P,N,chunk", [
+    (2, 64, 3, 8, 16, 16),
+    (1, 128, 2, 16, 32, 32),
+    (2, 96, 1, 4, 8, 32),     # S not a multiple of chunk -> falls back
+])
+def test_ssm_scan_vs_sequential(Bb, S, H, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (Bb, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bb, S, N)) * 0.3
+    C = jax.random.normal(ks[4], (Bb, S, N)) * 0.3
+    y_ref, h_ref = ssm_ref.ssd_sequential_ref(x, dt, A, B, C)
+    y_chu, h_chu = ssm_ref.ssd_chunked_ref(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chu), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    y_pal, h_pal = ssm_ops.ssm_scan(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_pal), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_scan_initial_state():
+    Bb, S, H, P, N = 2, 32, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    x = jax.random.normal(ks[0], (Bb, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bb, S, N)) * 0.3
+    C = jax.random.normal(ks[4], (Bb, S, N)) * 0.3
+    h0 = jax.random.normal(ks[5], (Bb, H, P, N)) * 0.2
+    y_ref, h_ref = ssm_ref.ssd_sequential_ref(x, dt, A, B, C, initial_state=h0)
+    y, h = ssm_ops.ssm_scan(x, dt, A, B, C, chunk=16, initial_state=h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,164 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as M
+from repro.core.dispatch import MultiListQueue
+from repro.core.ensemble import Candidate, confidence
+from repro.core.exec_optimizer import merge_once, plan_expansion
+from repro.core.profiler import LatencyModel, fit_latency_model
+from repro.core.scheduler import DynamicScheduler, EdgeModelInfo
+from repro.serving.network import NetworkModel
+from repro.serving.requests import SketchTask
+from repro.serving.sampler import SamplerConfig, sample
+
+words = st.text(alphabet="abcdefg ", min_size=1, max_size=30)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+@given(words, words)
+@settings(max_examples=60, deadline=None)
+def test_rouge1_bounds_and_symmetry_of_overlap(a, b):
+    p, r, f1 = M.rouge_1(a, b)
+    assert 0.0 <= p <= 1.0 and 0.0 <= r <= 1.0 and 0.0 <= f1 <= 1.0
+    p2, r2, _ = M.rouge_1(b, a)
+    # precision/recall swap under argument swap
+    assert math.isclose(p, r2, abs_tol=1e-12)
+    assert math.isclose(r, p2, abs_tol=1e-12)
+
+
+@given(words)
+@settings(max_examples=30, deadline=None)
+def test_rouge_identity(a):
+    if a.split():
+        _, _, f1 = M.rouge_1(a, a)
+        assert math.isclose(f1, 1.0)
+        _, _, fl = M.rouge_l(a, a)
+        assert math.isclose(fl, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# execution optimizer
+# ---------------------------------------------------------------------------
+
+@given(st.lists(words.filter(lambda s: s.strip()), min_size=1, max_size=16))
+@settings(max_examples=60, deadline=None)
+def test_merge_once_halves_and_preserves(sentences):
+    groups = [[s] for s in sentences]
+    merged = merge_once(groups)
+    assert len(merged) == math.ceil(len(groups) / 2)
+    assert sorted(s for g in merged for s in g) == sorted(sentences)
+
+
+@given(st.lists(words.filter(lambda s: s.strip()), min_size=1, max_size=12),
+       st.floats(min_value=0.0, max_value=100.0))
+@settings(max_examples=60, deadline=None)
+def test_plan_expansion_invariants(sentences, budget):
+    plan = plan_expansion(sentences, lambda p, t: 0.05 * t, budget)
+    flat = sorted(s for g in plan.groups for s in g)
+    assert flat == sorted(s for s in sentences if s.strip()) or not flat
+    assert 1 <= plan.parallelism <= max(len(flat), 1)
+
+
+# ---------------------------------------------------------------------------
+# dispatch queue
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(min_value=1, max_value=2000), min_size=0,
+                max_size=40),
+       st.integers(min_value=1, max_value=8))
+@settings(max_examples=60, deadline=None)
+def test_multilist_queue_conservation(lengths, batch):
+    q = MultiListQueue()
+    for i, l in enumerate(lengths):
+        q.push(SketchTask(req_id=i, query="", sketch="", sentences=[],
+                          expected_length=l, sketch_tokens=1))
+    out = []
+    guard = 0
+    while len(q) and guard < 1000:
+        b = q.pull_batch(batch)
+        assert 0 < len(b) <= batch
+        # uniformity: a batch comes from a single length bucket
+        idxs = {q._index(t.expected_length) for t in b}
+        assert len(idxs) == 1
+        out.extend(t.req_id for t in b)
+        guard += 1
+    assert sorted(out) == list(range(len(lengths)))
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=60, max_value=2000),
+       st.floats(min_value=5.0, max_value=100.0),
+       st.floats(min_value=1.0, max_value=100.0))
+@settings(max_examples=60, deadline=None)
+def test_scheduler_decision_always_meets_hard_constraint(l, cloud_rate,
+                                                         edge_rate):
+    cloud = LatencyModel(t0=0.5, rate=cloud_rate)
+    edges = [EdgeModelInfo("e", LatencyModel(t0=0.5, rate=edge_rate), 0.7)]
+    s = DynamicScheduler(cloud, edges, NetworkModel(), 4)
+    d = s.schedule(l)
+    if d.mode == "progressive":
+        assert d.est_latency_s <= cloud.f(l) + 1e-6
+        assert 0 < d.sketch_tokens <= l
+
+
+# ---------------------------------------------------------------------------
+# ensemble confidence
+# ---------------------------------------------------------------------------
+
+@given(st.floats(min_value=-20.0, max_value=0.0),
+       st.integers(min_value=1, max_value=500))
+@settings(max_examples=60, deadline=None)
+def test_confidence_bounded_01(mlp, n):
+    c = Candidate("some words here", mlp, n, "m")
+    v = confidence(c, "some words", [c])
+    assert 0.0 <= v <= 1.0 + 1e-9
+
+
+@given(st.floats(min_value=-10.0, max_value=-0.1))
+@settings(max_examples=30, deadline=None)
+def test_confidence_monotone_in_logprob(mlp):
+    base = Candidate("same words", mlp, 10, "a")
+    better = Candidate("same words", mlp + 0.05, 10, "b")
+    pool = [base, better]
+    assert confidence(better, "same words", pool) >= confidence(
+        base, "same words", pool)
+
+
+# ---------------------------------------------------------------------------
+# profiler fit
+# ---------------------------------------------------------------------------
+
+@given(st.floats(min_value=0.0, max_value=5.0),
+       st.floats(min_value=1.0, max_value=500.0))
+@settings(max_examples=40, deadline=None)
+def test_latency_fit_roundtrip(t0, rate):
+    true = LatencyModel(t0=t0, rate=rate)
+    fit = fit_latency_model([(l, true.f(l)) for l in (8, 32, 128, 512)])
+    assert abs(fit.f(256) - true.f(256)) <= 1e-6 + 0.01 * true.f(256)
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=16),
+       st.integers(min_value=0, max_value=3))
+@settings(max_examples=20, deadline=None)
+def test_topk_sampling_stays_in_topk(k, seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (4, 32))
+    toks = sample(logits, key, SamplerConfig(temperature=1.0, top_k=k))
+    top = jnp.argsort(logits, axis=-1)[:, -k:]
+    for b in range(4):
+        assert int(toks[b]) in np.asarray(top[b])

@@ -1,0 +1,102 @@
+"""Calibrated-simulator invariants + paper Table III structural claims."""
+import pytest
+
+from repro.core.simulator import (METHODS, SimConfig, make_requests,
+                                  simulate_cloud_only, simulate_edge_only,
+                                  simulate_pice, simulate_routing)
+
+
+@pytest.fixture(scope="module")
+def saturated():
+    cfg = SimConfig(cloud_model="llama3-70b", cloud_batch=20, rpm=30,
+                    n_requests=300)
+    out = {}
+    for name, fn in METHODS.items():
+        reqs = make_requests(cfg.n_requests, cfg.rpm, cfg.seed)
+        out[name] = fn(cfg, reqs)
+    return cfg, out
+
+
+def test_all_requests_complete(saturated):
+    _, res = saturated
+    for name, r in res.items():
+        assert r.completed == r.offered, name
+
+
+def test_pice_throughput_band(saturated):
+    """Paper claim: 1.5x-2x throughput over cloud-only at saturation."""
+    _, res = saturated
+    ratio = res["pice"].throughput_per_min / res["cloud_only"].throughput_per_min
+    assert 1.3 <= ratio <= 2.5, f"PICE/cloud throughput ratio {ratio:.2f}"
+
+
+def test_pice_latency_reduction(saturated):
+    """Paper claim: up to 43% latency reduction (ours exceeds it)."""
+    _, res = saturated
+    cut = 1 - res["pice"].avg_latency_s / res["cloud_only"].avg_latency_s
+    assert cut >= 0.38, f"latency cut {cut:.0%}"
+
+
+def test_edge_only_is_worst(saturated):
+    _, res = saturated
+    assert res["edge_only"].throughput_per_min <= min(
+        res["cloud_only"].throughput_per_min,
+        res["pice"].throughput_per_min)
+    assert res["edge_only"].avg_latency_s >= res["cloud_only"].avg_latency_s
+
+
+def test_pice_offloads_cloud_tokens(saturated):
+    _, res = saturated
+    assert res["pice"].cloud_tokens < 0.6 * res["cloud_only"].cloud_tokens
+    assert res["pice"].edge_tokens > 0
+
+
+def test_small_cloud_model_regression_case():
+    """Paper: with an 8B cloud model PICE ~ cloud-only (edge too slow to help)."""
+    cfg = SimConfig(cloud_model="llama3-8b", cloud_batch=80,
+                    edge_models=("qwen2.5-7b", "qwen2.5-1.5b"), rpm=120,
+                    n_requests=300)
+    c = simulate_cloud_only(cfg, make_requests(300, cfg.rpm, 0))
+    p = simulate_pice(cfg, make_requests(300, cfg.rpm, 0))
+    ratio = p.throughput_per_min / c.throughput_per_min
+    assert 0.9 <= ratio <= 1.15
+
+
+def test_dynamic_beats_static_scheduling():
+    """Paper Fig. 6a: dynamic scheduling adds throughput over static."""
+    base = dict(cloud_model="llama3-70b", cloud_batch=20, rpm=60,
+                n_requests=300)
+    dyn = simulate_pice(SimConfig(**base, dynamic=True),
+                        make_requests(300, 60, 0))
+    sta = simulate_pice(SimConfig(**base, dynamic=False),
+                        make_requests(300, 60, 0))
+    assert dyn.throughput_per_min >= sta.throughput_per_min * 1.05, \
+        "dynamic scheduling should add throughput over static under load"
+    assert dyn.avg_latency_s <= sta.avg_latency_s
+
+
+def test_rpm_saturation_behavior():
+    """Paper Fig. 12: below cloud capacity PICE ~ cloud-only; above it PICE
+    keeps scaling while cloud-only saturates."""
+    lo = SimConfig(cloud_model="llama3-70b", cloud_batch=20, rpm=8,
+                   n_requests=200)
+    hi = SimConfig(cloud_model="llama3-70b", cloud_batch=20, rpm=60,
+                   n_requests=400)
+    c_lo = simulate_cloud_only(lo, make_requests(200, 8, 1))
+    p_lo = simulate_pice(lo, make_requests(200, 8, 1))
+    assert abs(p_lo.throughput_per_min - c_lo.throughput_per_min) \
+        / c_lo.throughput_per_min < 0.15
+    c_hi = simulate_cloud_only(hi, make_requests(400, 60, 1))
+    p_hi = simulate_pice(hi, make_requests(400, 60, 1))
+    assert p_hi.throughput_per_min > 1.3 * c_hi.throughput_per_min
+
+
+def test_bandwidth_insensitivity():
+    """Paper Fig. 14: bandwidth has minimal impact (inference dominates)."""
+    res = []
+    for bw in (10.0, 100.0, 1000.0):
+        cfg = SimConfig(cloud_model="llama3-70b", rpm=30, n_requests=200,
+                        bandwidth_mbps=bw)
+        res.append(simulate_pice(cfg, make_requests(200, 30, 2)))
+    ths = [r.throughput_per_min for r in res]
+    assert max(ths) - min(ths) < 0.1 * max(ths)

@@ -1,0 +1,81 @@
+"""Training substrate: loss goes down, checkpoints round-trip, optimizer
+behaviors."""
+import math
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.pice_cloud_edge import TINY_EDGE_B
+from repro.data import corpus as corpus_lib
+from repro.data.pipeline import PackedDataset
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt_lib
+from repro.training.losses import cross_entropy
+from repro.training.train_loop import init_train_state, train
+
+
+def test_loss_decreases_on_synthetic_corpus():
+    cfg = TINY_EDGE_B
+    text = corpus_lib.lm_text(300, seed=1)
+    ds = PackedDataset(text, seq_len=128, batch_size=8, seed=1)
+    state = init_train_state(cfg, seed=1)
+    losses = []
+    opt_cfg = opt_lib.AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=40)
+    state = train(cfg, state, iter(ds), opt_cfg, 40, log_every=1000,
+                  log_fn=lambda s: losses.append(s))
+    # evaluate before/after on a fixed batch
+    it = iter(ds)
+    tokens, targets = next(it)
+    from repro.models import transformer
+    logits, _ = transformer.forward(cfg, state.params, jnp.asarray(tokens))
+    final_loss, _ = cross_entropy(logits, jnp.asarray(targets))
+    fresh = init_train_state(cfg, seed=1)
+    logits0, _ = transformer.forward(cfg, fresh.params, jnp.asarray(tokens))
+    init_loss, _ = cross_entropy(logits0, jnp.asarray(targets))
+    assert float(final_loss) < float(init_loss) * 0.8, \
+        f"loss {float(init_loss):.3f} -> {float(final_loss):.3f} too small a drop"
+
+
+def test_adamw_grad_clip_and_lr_schedule():
+    cfg = opt_lib.AdamWConfig(lr=1.0, grad_clip=1.0, warmup_steps=10,
+                              total_steps=100, schedule="cosine")
+    assert float(opt_lib.lr_at(cfg, jnp.asarray(0))) < 0.2
+    assert abs(float(opt_lib.lr_at(cfg, jnp.asarray(10))) - 1.0) < 0.2
+    assert float(opt_lib.lr_at(cfg, jnp.asarray(99))) <= 0.2
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 100.0)}
+    st = opt_lib.init_opt_state(params)
+    p2, st2, m = opt_lib.adamw_update(cfg, params, grads, st)
+    assert float(m["grad_norm"]) > 1.0
+    assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.bfloat16),
+                  {"c": jnp.asarray(3, jnp.int32)}]}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 7, tree)
+        assert ckpt.latest_step(d) == 7
+        out = ckpt.restore(d, None, tree)
+        assert out["a"].dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        np.testing.assert_array_equal(
+            np.asarray(out["b"][0], np.float32),
+            np.asarray(tree["b"][0], np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.ones((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, tree)
+        bad = {"a": jnp.ones((3, 3))}
+        try:
+            ckpt.restore(d, 1, bad)
+            assert False, "should raise"
+        except ValueError:
+            pass
