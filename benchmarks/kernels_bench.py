@@ -44,6 +44,29 @@ def run():
         da_ref.decode_attention_ref(q1, kc, vc, lens)))
     emit("kernels/decode_attention_ref", us, f"kv_bytes={bytes_:.2e}")
 
+    # paged decode read path: block-table gather + the same attention — the
+    # serving engine's paged backend (gather cost is the paging overhead a
+    # TPU kernel would stream away)
+    from repro.models import paged_cache as pc
+    page = 64
+    P = S // page
+    n_pages = B * P
+    pages_k = kc.reshape(n_pages, page, Hkv, hd)
+    pages_v = vc.reshape(n_pages, page, Hkv, hd)
+    table = jnp.arange(n_pages, dtype=jnp.int32).reshape(B, P)
+
+    @jax.jit
+    def paged_decode(q, pk, pv, tbl, ln):
+        gk = pc.gather_sequence(pk, tbl)
+        gv = pc.gather_sequence(pv, tbl)
+        return da_ref.decode_attention_ref(q, gk, gv, ln)
+
+    jax.block_until_ready(paged_decode(q1, pages_k, pages_v, table, lens))
+    _, us = timed(lambda: jax.block_until_ready(
+        paged_decode(q1, pages_k, pages_v, table, lens)))
+    emit("kernels/decode_attention_paged_gather", us,
+         f"kv_bytes={bytes_:.2e};page={page};pages={n_pages}")
+
     # rmsnorm
     from repro.kernels.rmsnorm import ops as rn, ref as rn_ref
     x = jax.random.normal(key, (4096, 1024), jnp.bfloat16)

@@ -36,10 +36,11 @@ def main() -> None:
         ("roofline", roofline.run),
     ]
     if not args.fast:
-        from benchmarks import fig9_ensemble, fig10_finetune
+        from benchmarks import fig9_ensemble, fig10_finetune, paged_engine_bench
         suites += [
             ("fig9", fig9_ensemble.run),
             ("fig10", fig10_finetune.run),
+            ("paged_engine", paged_engine_bench.run),
         ]
     if args.only:
         keep = set(args.only.split(","))

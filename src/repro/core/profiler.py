@@ -100,6 +100,11 @@ class RuntimeMonitor:
     edge_busy: Dict[str, float] = dataclasses.field(default_factory=dict)
     net_bandwidth_mbps: float = 100.0
     net_rtt_s: float = 0.02
+    # engine KV-memory telemetry (paged backend): the scheduler admits work
+    # against real page-pool pressure instead of a fixed max_batch
+    kv_pages_total: int = 0
+    kv_pages_used: int = 0
+    kv_evictions: int = 0
 
     def on_enqueue(self, expected_tokens: float):
         self.queue_depth += 1
@@ -109,3 +114,32 @@ class RuntimeMonitor:
         self.queue_depth = max(0, self.queue_depth - 1)
         self.queued_expected_tokens = max(
             0.0, self.queued_expected_tokens - expected_tokens)
+
+    def update_memory(self, pages_used: int, pages_total: int,
+                      evictions: int = 0):
+        self.kv_pages_used = pages_used
+        self.kv_pages_total = pages_total
+        self.kv_evictions = evictions
+
+    def observe_engines(self, engines) -> None:
+        """Aggregate KV memory pressure across a fleet of InferenceEngines.
+
+        Uses each engine's windowed peak (`consume_peak`) rather than its
+        instantaneous occupancy: in the synchronous pipeline pools drain to
+        zero between requests, so only the high-water mark since the last
+        observation carries signal."""
+        used = total = ev = 0
+        for eng in engines:
+            st = eng.memory_stats()
+            peak = eng.consume_peak() if hasattr(eng, "consume_peak") \
+                else int(st.get("pages_in_use", 0))
+            used += peak
+            total += int(st.get("pages_total", 0))
+            ev += int(st.get("evictions", 0))
+        self.update_memory(used, total, ev)
+
+    @property
+    def kv_utilization(self) -> float:
+        if self.kv_pages_total <= 0:
+            return 0.0
+        return self.kv_pages_used / self.kv_pages_total

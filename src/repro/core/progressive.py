@@ -73,6 +73,8 @@ class PICEPipeline:
     # ------------------------------------------------------------------
     def handle(self, req: Request) -> Response:
         t_start = time.perf_counter()
+        # refresh KV-memory telemetry so Eq.(2) sees real page-pool pressure
+        self.monitor.observe_engines(self.edges.values())
         l_i = min(self.predict_length(req), req.max_new_tokens)
 
         # short answers: no progressive inference (workflow step 2a)
@@ -130,8 +132,12 @@ class PICEPipeline:
         self.queue.pull_batch(1)
         self.monitor.on_dequeue(l_i)
 
-        # expand groups on the ensemble of edge engines
+        # expand groups on the ensemble of edge engines; under KV-memory
+        # pressure fall back to the primary model alone (ensembling doubles
+        # the page footprint for a marginal quality gain)
         names = self._ensemble_names(primary)
+        if self.monitor.kv_utilization > 0.85:
+            names = names[:1]
         per_tok = max(len(tok.encode(" ".join(g))) for g in plan.groups)
         max_new = min(int(per_tok * 3.5) + 24, req.max_new_tokens)
         group_prompts = [sketch_lib.edge_expand_prompt(req.query, sketch_text, g)

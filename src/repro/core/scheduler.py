@@ -60,12 +60,22 @@ class DynamicScheduler:
         self.n_levels = n_levels
         self.queue_max = queue_max
 
+    # -- memory pressure ---------------------------------------------------
+    def memory_pressure_factor(self) -> float:
+        """Queueing-delay inflation from KV page-pool occupancy (M/M/1-style
+        1/(1-rho)). At util 0 (dense backend / no telemetry) this is 1.0, so
+        the seed behavior is unchanged; near exhaustion waits blow up and the
+        scheduler backs off to shorter sketches / cloud_full."""
+        rho = min(self.monitor.kv_utilization, 0.95)
+        return 1.0 / (1.0 - rho)
+
     # -- Eq. (2) -----------------------------------------------------------
     def e2e_latency(self, sketch_tokens: int, expected_len: int,
                     edge: EdgeModelInfo, parallelism: int) -> float:
         c_f_l = edge.latency.f(expected_len / max(parallelism, 1))
         wait = (self.monitor.queued_expected_tokens / edge.latency.rate
                 ) / (max(parallelism, 1) * self.n_edge)
+        wait *= self.memory_pressure_factor()
         return (self.cloud.f(sketch_tokens)
                 + self.network.delay_s(sketch_tokens)
                 + c_f_l + wait)

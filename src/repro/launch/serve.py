@@ -30,7 +30,7 @@ from repro.training.train_loop import init_train_state, train
 
 
 def build_engines(train_steps: int = 0, seed: int = 0, log_fn=print,
-                  names=None):
+                  names=None, kv_backend: str = "paged"):
     engines = {}
     text = corpus_lib.lm_text(2000, seed)
     caps = {"tiny-cloud": 0.9, "tiny-edge-a": 0.7, "tiny-edge-b": 0.55,
@@ -48,7 +48,8 @@ def build_engines(train_steps: int = 0, seed: int = 0, log_fn=print,
             state = train(cfg, state, iter(ds), opt_cfg, train_steps,
                           log_every=max(train_steps // 2, 1), log_fn=log_fn)
         engines[name] = InferenceEngine(cfg, state.params, max_batch=8,
-                                        max_len=1024, name=name)
+                                        max_len=1024, name=name,
+                                        kv_backend=kv_backend)
     return engines, caps
 
 
@@ -75,9 +76,13 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-backend", choices=("dense", "paged"),
+                    default="paged",
+                    help="KV cache backend (paged = on-demand page pool)")
     args = ap.parse_args()
 
-    engines, caps = build_engines(args.train_steps, args.seed)
+    engines, caps = build_engines(args.train_steps, args.seed,
+                                  kv_backend=args.kv_backend)
     pipe = build_pipeline(engines, caps)
     examples = corpus_lib.corpus(args.requests, seed=args.seed + 7)
     t0 = time.time()

@@ -273,6 +273,41 @@ def attention_decode(cfg: ModelConfig, params: dict, x: jax.Array,
     return out, layer_k, layer_v
 
 
+def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
+                           k_pages: jax.Array, v_pages: jax.Array,
+                           block_table: jax.Array, lengths: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode step against a paged KV pool (vLLM-style block table).
+
+    x: (B, 1, D); k_pages/v_pages: (n_pages, page, n_kv, hd) this layer's
+    pools; block_table: (B, P) page ids (-1 = unmapped); lengths: (B,) tokens
+    already cached per slot. Returns (out, new_k_pages, new_v_pages).
+
+    The read path gathers each slot's pages into the contiguous layout and
+    runs the same masked grouped SDPA as the dense path, so dense and paged
+    backends are bit-identical (masked positions contribute exactly zero).
+    """
+    from repro.models import paged_cache as pc
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x)
+    positions = lengths[:, None] + jnp.arange(T)[None, :]
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k_pages, v_pages = pc.write_token(k_pages, v_pages, block_table, lengths,
+                                      k, v)
+    gk = pc.gather_sequence(k_pages, block_table)
+    gv = pc.gather_sequence(v_pages, block_table)
+    Sc = gk.shape[1]
+    ki = jnp.arange(Sc)[None, None, :]
+    qpos = positions[:, :, None]
+    mask = (ki <= qpos)[:, None]
+    out = _grouped_sdpa(q, gk, gv, mask, cfg.q_per_kv, cfg.attn_logit_softcap)
+    dt = x.dtype
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+    return out, k_pages, v_pages
+
+
 def _grouped_sdpa(q, k, v, mask, q_per_kv: int, softcap: float = 0.0):
     """GQA attention WITHOUT materializing repeated K/V.
 

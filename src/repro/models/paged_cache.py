@@ -50,14 +50,36 @@ def write_token(pages_k: jax.Array, pages_v: jax.Array, block_table: jax.Array,
     """Write one token per slot at its current length.
 
     pages_*: (n_pages, page, kv, hd); new_*: (B, 1, kv, hd)."""
-    page_size = pages_k.shape[1]
+    n_pages, page_size = pages_k.shape[0], pages_k.shape[1]
     pos = lengths
     page_of = jnp.take_along_axis(block_table, (pos // page_size)[:, None],
-                                  axis=1)[:, 0]          # (B,)
+                                  axis=1, mode="clip")[:, 0]    # (B,)
     off = pos % page_size
-    safe_page = jnp.maximum(page_of, 0)
+    # unmapped (-1) rows route to index n_pages, which mode="drop" discards —
+    # crucial for freed slots whose pages may now belong to another request
+    safe_page = jnp.where(page_of < 0, n_pages, page_of)
     pages_k = pages_k.at[safe_page, off].set(new_k[:, 0], mode="drop")
     pages_v = pages_v.at[safe_page, off].set(new_v[:, 0], mode="drop")
+    return pages_k, pages_v
+
+
+def write_prompt(pages_k: jax.Array, pages_v: jax.Array, block_row: jax.Array,
+                 new_k: jax.Array, new_v: jax.Array, prompt_len: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter a prefilled prompt's K/V into one sequence's pages.
+
+    pages_*: (n_pages, page, kv, hd); block_row: (P,) this sequence's block-
+    table row; new_*: (1, S, kv, hd) right-padded; prompt_len: () valid count.
+    """
+    n_pages, page_size = pages_k.shape[0], pages_k.shape[1]
+    S = new_k.shape[1]
+    pos = jnp.arange(S)
+    page_of = jnp.take(block_row, pos // page_size, mode="clip")
+    valid = (pos < prompt_len) & (page_of >= 0)
+    safe_page = jnp.where(valid, page_of, n_pages)       # OOB rows dropped
+    off = pos % page_size
+    pages_k = pages_k.at[safe_page, off].set(new_k[0], mode="drop")
+    pages_v = pages_v.at[safe_page, off].set(new_v[0], mode="drop")
     return pages_k, pages_v
 
 
@@ -96,6 +118,10 @@ class PageAllocator:
 
     def release(self, slot: int) -> None:
         self.free.extend(self.owned.pop(slot, []))
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self.free)
 
     @property
     def utilization(self) -> float:

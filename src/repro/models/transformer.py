@@ -402,8 +402,14 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict,
 
 
 def _prefill_block(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,
-                   positions, prompt_lengths, enc_out, mesh=None):
-    """Full-sequence pass that also produces the cache entry for this layer."""
+                   positions, prompt_lengths, enc_out, mesh=None,
+                   kv_writer=None):
+    """Full-sequence pass that also produces the cache entry for this layer.
+
+    kv_writer: optional (c, k, v) -> newc override for the attention-KV cache
+    entry (the paged backend scatters into its page pool here); the compute
+    path is shared so dense and paged prefill produce identical activations.
+    """
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
     if kind in (ATTN, MOE, SHARED_ATTN):
@@ -419,6 +425,9 @@ def _prefill_block(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,
             kv_lengths=prompt_lengths, softcap=cfg.attn_logit_softcap)
         h = jnp.einsum("bsnh,nhd->bsd", h, blk["attn"]["wo"].astype(x.dtype))
         x = x + h
+        if kv_writer is not None:
+            newc = kv_writer(c, k, v)
+            return _prefill_block_tail(cfg, kind, blk, x, newc, enc_out, mesh)
         newc = dict(c)
         if cfg.sliding_window:
             w = cfg.sliding_window
@@ -436,18 +445,7 @@ def _prefill_block(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,
         else:
             newc["k"] = jnp.zeros_like(c["k"]).at[:, :S].set(k)
             newc["v"] = jnp.zeros_like(c["v"]).at[:, :S].set(v)
-        if enc_out is not None and "xattn" in blk:
-            xin2 = norm(cfg, blk["norm_x"], x)
-            _, ck, cv = attn_lib._project_qkv(cfg, blk["xattn"], xin2,
-                                              kv_x=enc_out)
-            newc["cross_k"], newc["cross_v"] = ck, cv
-            x = x + attn_lib.cross_attention_cached(cfg, blk["xattn"], xin2, ck, cv)
-        if kind == MOE:
-            h, _ = moe_lib.moe_fwd(cfg, blk["moe"], norm(cfg, blk["norm2"], x),
-                                   mesh=mesh)
-        else:
-            h = mlp(cfg, blk["mlp"], norm(cfg, blk["norm2"], x))
-        return x + h, newc
+        return _prefill_block_tail(cfg, kind, blk, x, newc, enc_out, mesh)
     if kind == MAMBA2:
         out, conv_s, ssd_s = ssm_lib.mamba2_fwd(
             cfg, blk["mamba"], norm(cfg, blk["norm1"], x), return_state=True)
@@ -463,6 +461,24 @@ def _prefill_block(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,
                                       return_state=True)
         return x + out, st
     raise ValueError(kind)
+
+
+def _prefill_block_tail(cfg: ModelConfig, kind: str, blk: dict, x, newc,
+                        enc_out, mesh=None):
+    """Post-attention prefill tail shared by the dense and paged KV writers:
+    optional cross-attention cache, then the MoE/MLP block."""
+    if enc_out is not None and "xattn" in blk:
+        xin2 = norm(cfg, blk["norm_x"], x)
+        _, ck, cv = attn_lib._project_qkv(cfg, blk["xattn"], xin2,
+                                          kv_x=enc_out)
+        newc["cross_k"], newc["cross_v"] = ck, cv
+        x = x + attn_lib.cross_attention_cached(cfg, blk["xattn"], xin2, ck, cv)
+    if kind == MOE:
+        h, _ = moe_lib.moe_fwd(cfg, blk["moe"], norm(cfg, blk["norm2"], x),
+                               mesh=mesh)
+    else:
+        h = mlp(cfg, blk["mlp"], norm(cfg, blk["norm2"], x))
+    return x + h, newc
 
 
 # ---------------------------------------------------------------------------
@@ -502,6 +518,169 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict,
         logits = shd.constraint(logits, mesh, (shd.batch_axes(mesh), "model"))
     new_cache = {"lengths": lengths + 1, "segments": new_segs}
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (vLLM-style): init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _check_paged_support(cfg: ModelConfig) -> None:
+    assert cfg.sliding_window == 0, \
+        "paged KV cache supports full attention only (sliding_window=0)"
+    assert cfg.family != "encdec", \
+        "paged KV cache does not support cross-attention caches"
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, max_pages_per_seq: int,
+                     spec: bool = False) -> dict:
+    """Paged cache pytree: attention segments store per-layer page pools
+    addressed through one shared block table; recurrent segments (SSM/xLSTM)
+    keep their O(1) per-slot dense states.
+
+      k_pages/v_pages: (count, n_pages, page_size, n_kv, hd)
+      block_table:     (batch, max_pages_per_seq) int32, -1 = unmapped
+      lengths:         (batch,)
+    """
+    _check_paged_support(cfg)
+    hd = cfg.resolved_head_dim
+    adt = jnp.dtype(cfg.dtype)
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if spec else (
+        lambda sh, dt: jnp.zeros(sh, dt))
+    segs = []
+    for kind, count in segments_of(cfg):
+        if kind in (ATTN, MOE, SHARED_ATTN):
+            segs.append({
+                "k_pages": mk((count, n_pages, page_size, cfg.n_kv_heads, hd),
+                              adt),
+                "v_pages": mk((count, n_pages, page_size, cfg.n_kv_heads, hd),
+                              adt),
+            })
+        else:
+            segs.append(_seg_cache(cfg, kind, count, batch, 0, spec))
+    table = (jax.ShapeDtypeStruct((batch, max_pages_per_seq), jnp.int32)
+             if spec else jnp.full((batch, max_pages_per_seq), -1, jnp.int32))
+    return {"lengths": mk((batch,), jnp.int32), "block_table": table,
+            "segments": segs}
+
+
+def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                  cache: dict, slot, prompt_len, mesh=None
+                  ) -> Tuple[jax.Array, dict]:
+    """Prefill one request (tokens: (1, S) right-padded) directly into the
+    shared paged cache at batch row `slot`, whose block-table row must already
+    map enough pages for `prompt_len` tokens. Returns (logits (1, V), cache).
+    """
+    _check_paged_support(cfg)
+    from repro.models import paged_cache as pc
+    x = embed(cfg, params["embed"], tokens)
+    B, S, _ = x.shape
+    plen = jnp.asarray(prompt_len, jnp.int32).reshape(())
+    plens = plen[None]
+    positions = jnp.arange(S)[None]
+    block_row = cache["block_table"][slot]
+    x = _constrain(cfg, mesh, x)
+
+    def paged_writer(c, k, v):
+        pk, pv = pc.write_prompt(c["k_pages"], c["v_pages"], block_row,
+                                 k, v, plen)
+        return {"k_pages": pk, "v_pages": pv}
+
+    def insert_slot(big, one):
+        return jax.tree.map(
+            lambda bg, on: jax.lax.dynamic_update_slice(
+                bg, on.astype(bg.dtype), (slot,) + (0,) * (bg.ndim - 1)),
+            big, one)
+
+    def block(x, blk, c, kind):
+        if kind in (ATTN, MOE, SHARED_ATTN):
+            return _prefill_block(cfg, kind, blk, c, x, positions, plens,
+                                  None, mesh, kv_writer=paged_writer)
+        x, one = _prefill_block(cfg, kind, blk, c, x, positions, plens,
+                                None, mesh)
+        return x, insert_slot(c, one)
+
+    new_segs = []
+    for (kind, count), seg, segc in zip(segments_of(cfg), params["segments"],
+                                        cache["segments"]):
+        if kind == SHARED_ATTN:
+            x, newc = block(x, params["shared"],
+                            jax.tree.map(lambda a: a[0], segc), kind)
+            newc = jax.tree.map(lambda a: a[None], newc)
+        else:
+            def scan_body(x, inp, kind=kind):
+                blk, c = inp
+                x = _constrain(cfg, mesh, x)
+                return block(x, blk, c, kind)
+            x, newc = _scan_or_unroll(cfg, scan_body, x, (seg, segc))
+        new_segs.append(newc)
+
+    x = norm(cfg, params["final_norm"], x)
+    idx = jnp.clip(plens - 1, 0, S - 1)
+    last_h = jax.vmap(lambda h, i: h[i])(x, idx)
+    logits = unembed(cfg, params["embed"], last_h[:, None])[:, 0]
+    new_cache = {"lengths": cache["lengths"].at[slot].set(plen),
+                 "block_table": cache["block_table"], "segments": new_segs}
+    return logits, new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                      cache: dict, mesh=None) -> Tuple[jax.Array, dict]:
+    """tokens: (B, 1) -> (logits (B, vocab), updated paged cache).
+
+    Attention layers append the new token into their page pools through the
+    block table and read via the gather path; recurrent layers are identical
+    to the dense decode.
+    """
+    _check_paged_support(cfg)
+    x = embed(cfg, params["embed"], tokens)
+    lengths = cache["lengths"]
+    table = cache["block_table"]
+    x = _constrain(cfg, mesh, x)
+
+    def block(x, blk, c, kind):
+        if kind in (ATTN, MOE, SHARED_ATTN):
+            return _decode_block_paged(cfg, kind, blk, c, x, lengths, table,
+                                       mesh)
+        return _decode_block(cfg, kind, blk, c, x, lengths, mesh)
+
+    new_segs = []
+    for (kind, count), seg, segc in zip(segments_of(cfg), params["segments"],
+                                        cache["segments"]):
+        if kind == SHARED_ATTN:
+            x, newc = block(x, params["shared"],
+                            jax.tree.map(lambda a: a[0], segc), kind)
+            newc = jax.tree.map(lambda a: a[None], newc)
+        else:
+            def scan_body(x, inp, kind=kind):
+                blk, c = inp
+                x = _constrain(cfg, mesh, x)
+                return block(x, blk, c, kind)
+            x, newc = _scan_or_unroll(cfg, scan_body, x, (seg, segc))
+        new_segs.append(newc)
+
+    x = norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)[:, 0]
+    if mesh is not None:
+        logits = shd.constraint(logits, mesh, (shd.batch_axes(mesh), "model"))
+    new_cache = {"lengths": lengths + 1, "block_table": table,
+                 "segments": new_segs}
+    return logits, new_cache
+
+
+def _decode_block_paged(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,
+                        lengths, table, mesh=None):
+    xin = norm(cfg, blk["norm1"], x)
+    h, nk, nv = attn_lib.attention_decode_paged(
+        cfg, blk["attn"], xin, c["k_pages"], c["v_pages"], table, lengths)
+    x = x + h
+    newc = {"k_pages": nk, "v_pages": nv}
+    if kind == MOE:
+        h, _ = moe_lib.moe_fwd(cfg, blk["moe"], norm(cfg, blk["norm2"], x),
+                               mesh=mesh)
+    else:
+        h = mlp(cfg, blk["mlp"], norm(cfg, blk["norm2"], x))
+    return x + h, newc
 
 
 def _decode_block(cfg: ModelConfig, kind: str, blk: dict, c: dict, x, lengths,

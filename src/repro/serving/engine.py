@@ -1,5 +1,15 @@
 """Real-compute inference engine: jitted prefill/decode with continuous
-batching (Orca-style slot recycling) over a shared multi-slot KV cache.
+batching (Orca-style slot recycling) over a shared KV cache.
+
+Two KV backends (`kv_backend`):
+  "dense": one max_batch x max_len reservation per slot (the seed layout,
+      kept for A/B equivalence testing).
+  "paged": vLLM-style paged cache (models/paged_cache.py) — pages are
+      allocated on demand at add_request, appended per decode step, and freed
+      on completion; when the pool runs dry the youngest request is evicted
+      (preempted) and transparently resubmitted, so a small pool degrades to
+      recompute instead of failing. Dense and paged are bit-identical on the
+      same request stream (masked page garbage contributes exactly zero).
 
 This is the engine the examples and real-compute benchmarks run on CPU with
 tiny models; on TPU the same code serves the full configs (the dry-run proves
@@ -9,6 +19,7 @@ jit recompilation.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -18,6 +29,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.models.paged_cache import PageAllocator
 from repro.serving.sampler import SamplerConfig, sample, token_logprob
 
 
@@ -28,6 +40,62 @@ def _bucket(n: int, lo: int = 32) -> int:
     return b
 
 
+# ---------------------------------------------------------------------------
+# Jitted entry points, shared across engine instances. ModelConfig is a
+# frozen dataclass (hashable), so engines with the same config — the edge
+# fleet, A/B dense-vs-paged pairs, short-lived benchmark engines — reuse one
+# trace cache instead of recompiling per instance.
+# ---------------------------------------------------------------------------
+
+def _prefill_dense_fn(cfg, params, tokens, cache, lengths):
+    return transformer.prefill(cfg, params, tokens, cache,
+                               prompt_lengths=lengths)
+
+
+def _score_fn(cfg, params, tokens):
+    """Teacher-forced mean logprob of tokens[1:] given tokens[:-1]."""
+    logits, _ = transformer.forward(cfg, params, tokens[None, :-1])
+    logp = jax.nn.log_softmax(logits[0].astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, tokens[1:][:, None], axis=-1)[:, 0]
+    return jnp.mean(gold), gold
+
+
+def _insert_fn(big, one, slot):
+    """Insert a batch-1 cache into slot `slot` of the big cache.
+    Cache layout: lengths (B,); segment leaves (L, B, ...) — batch axis 1."""
+    out = {"lengths": jax.lax.dynamic_update_slice(
+        big["lengths"], one["lengths"].astype(big["lengths"].dtype), (slot,))}
+    segs = []
+    for bseg, oseg in zip(big["segments"], one["segments"]):
+        seg = {}
+        for k in bseg:
+            idx = (0, slot) + (0,) * (bseg[k].ndim - 2)
+            seg[k] = jax.lax.dynamic_update_slice(
+                bseg[k], oseg[k].astype(bseg[k].dtype), idx)
+        segs.append(seg)
+    out["segments"] = segs
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(cfg: ModelConfig, kind: str):
+    if kind == "decode":
+        return jax.jit(functools.partial(transformer.decode_step, cfg))
+    if kind == "decode_paged":
+        return jax.jit(functools.partial(transformer.decode_step_paged, cfg),
+                       donate_argnums=(2,))
+    if kind == "prefill":
+        return jax.jit(functools.partial(_prefill_dense_fn, cfg))
+    if kind == "prefill_paged":
+        return jax.jit(functools.partial(transformer.prefill_paged, cfg),
+                       donate_argnums=(2,))
+    if kind == "insert":
+        return jax.jit(_insert_fn, donate_argnums=(0,))
+    if kind == "score":
+        return jax.jit(functools.partial(_score_fn, cfg))
+    raise ValueError(kind)
+
+
 @dataclasses.dataclass
 class Slot:
     req_id: int = -1
@@ -36,6 +104,20 @@ class Slot:
     logprobs: List[float] = dataclasses.field(default_factory=list)
     max_new: int = 0
     generated: int = 0
+    prompt: List[int] = dataclasses.field(default_factory=list)
+    ctx_len: int = 0        # tokens currently in the KV cache for this slot
+    arrival: int = 0        # admission order (eviction picks the youngest)
+    evicted: bool = False   # preempted: requeue instead of completing
+
+
+@dataclasses.dataclass
+class _Resume:
+    """A preempted request: resubmitted with its generated prefix carried."""
+    req_id: int
+    prompt: List[int]
+    max_new: int
+    carry_tokens: List[int]
+    carry_lps: List[float]
 
 
 class InferenceEngine:
@@ -43,7 +125,10 @@ class InferenceEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_len: int = 1024, sampler: SamplerConfig = SamplerConfig(),
-                 eos_id: int = 0, name: str = "engine"):
+                 eos_id: int = 0, name: str = "engine",
+                 kv_backend: str = "dense", page_size: int = 32,
+                 n_pages: Optional[int] = None):
+        assert kv_backend in ("dense", "paged"), kv_backend
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -51,69 +136,152 @@ class InferenceEngine:
         self.sampler = sampler
         self.eos_id = eos_id
         self.name = name
+        self.kv_backend = kv_backend
         self.slots = [Slot() for _ in range(max_batch)]
-        self.cache = transformer.init_cache(cfg, max_batch, max_len)
         self.key = jax.random.PRNGKey(0)
         self.tokens_generated = 0
         self.busy_s = 0.0
+        self._arrivals = 0
+        self.evictions = 0
+        self.peak_pages = 0
+        self._window_peak = 0
+        self._resume_queue: List[_Resume] = []
 
-        self._decode = jax.jit(
-            lambda p, t, c: transformer.decode_step(cfg, p, t, c))
-        self._prefill = jax.jit(
-            lambda p, t, c, l: transformer.prefill(cfg, p, t, c,
-                                                   prompt_lengths=l))
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
-        self._score = jax.jit(self._score_impl)
+        if kv_backend == "paged":
+            assert max_len % page_size == 0, "max_len must be page-aligned"
+            self.page_size = page_size
+            self.pages_per_seq = max_len // page_size
+            self.n_pages = n_pages or max_batch * self.pages_per_seq
+            self.alloc = PageAllocator(self.n_pages, page_size,
+                                       self.pages_per_seq)
+            self.block_table = np.full((max_batch, self.pages_per_seq), -1,
+                                       np.int32)
+            self.cache = transformer.init_paged_cache(
+                cfg, max_batch, self.n_pages, page_size, self.pages_per_seq)
+            self._push_table()
+            self._decode = _jitted(cfg, "decode_paged")
+            self._prefill_paged = _jitted(cfg, "prefill_paged")
+        else:
+            self.cache = transformer.init_cache(cfg, max_batch, max_len)
+            self._decode = _jitted(cfg, "decode")
+            self._prefill = _jitted(cfg, "prefill")
+            self._insert = _jitted(cfg, "insert")
+        self._score = _jitted(cfg, "score")
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def _insert_impl(big, one, slot):
-        """Insert a batch-1 cache into slot `slot` of the big cache.
-        Cache layout: lengths (B,); segment leaves (L, B, ...) — batch axis 1."""
-        out = {"lengths": jax.lax.dynamic_update_slice(
-            big["lengths"], one["lengths"].astype(big["lengths"].dtype), (slot,))}
-        segs = []
-        for bseg, oseg in zip(big["segments"], one["segments"]):
-            seg = {}
-            for k in bseg:
-                idx = (0, slot) + (0,) * (bseg[k].ndim - 2)
-                seg[k] = jax.lax.dynamic_update_slice(
-                    bseg[k], oseg[k].astype(bseg[k].dtype), idx)
-            segs.append(seg)
-        out["segments"] = segs
-        return out
+    # Paged-backend bookkeeping
+    # ------------------------------------------------------------------
+    def _push_table(self):
+        self.cache["block_table"] = jnp.asarray(self.block_table)
 
-    def _score_impl(self, params, tokens):
-        """Teacher-forced mean logprob of tokens[1:] given tokens[:-1]."""
-        logits, _ = transformer.forward(self.cfg, params, tokens[None, :-1])
-        logp = jax.nn.log_softmax(logits[0].astype(jnp.float32), axis=-1)
-        gold = jnp.take_along_axis(logp, tokens[1:][:, None], axis=-1)[:, 0]
-        return jnp.mean(gold), gold
+    def _track_peak(self):
+        used = self.alloc.pages_in_use
+        self.peak_pages = max(self.peak_pages, used)
+        self._window_peak = max(self._window_peak, used)
+
+    def consume_peak(self) -> int:
+        """High-water page usage since the last call, then reset the window.
+        The PICE pipeline is synchronous — pools drain to zero between
+        requests — so instantaneous occupancy is always 0 at observation
+        time; the windowed peak is the pressure signal that survives."""
+        if self.kv_backend != "paged":
+            return sum(1 for s in self.slots if s.active)
+        peak = max(self._window_peak, self.alloc.pages_in_use)
+        self._window_peak = self.alloc.pages_in_use
+        return peak
+
+    def _release_slot_pages(self, slot: int):
+        self.alloc.release(slot)
+        self.block_table[slot, :] = -1
+        self._push_table()
+
+    def _evict_youngest(self, protect: int) -> bool:
+        """Preempt the youngest active slot other than `protect`; its pages
+        return to the pool and the request is queued for resubmission."""
+        victims = [i for i, s in enumerate(self.slots)
+                   if s.active and i != protect]
+        if not victims:
+            return False
+        v = max(victims, key=lambda i: self.slots[i].arrival)
+        s = self.slots[v]
+        self._resume_queue.append(_Resume(
+            req_id=s.req_id, prompt=list(s.prompt),
+            max_new=s.max_new, carry_tokens=list(s.tokens),
+            carry_lps=list(s.logprobs)))
+        self._release_slot_pages(v)
+        s.active, s.evicted, s.req_id = False, True, -1
+        self.evictions += 1
+        return True
+
+    def memory_stats(self) -> Dict[str, float]:
+        """Engine-level KV memory telemetry (for RuntimeMonitor)."""
+        if self.kv_backend == "paged":
+            return {"backend": "paged", "pages_total": self.n_pages,
+                    "pages_in_use": self.alloc.pages_in_use,
+                    "peak_pages": self.peak_pages,
+                    "utilization": self.alloc.utilization,
+                    "evictions": self.evictions}
+        used = sum(1 for s in self.slots if s.active)
+        return {"backend": "dense", "pages_total": self.max_batch,
+                "pages_in_use": used, "peak_pages": self.max_batch,
+                "utilization": used / self.max_batch, "evictions": 0}
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Admission check against real memory, not just a fixed max_batch."""
+        if not self.free_slots():
+            return False
+        if self.kv_backend == "paged":
+            need = max(1, -(-min(prompt_len, self.max_len) // self.page_size))
+            return len(self.alloc.free) >= need
+        return True
 
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if not s.active]
 
-    def add_request(self, req_id: int, prompt: List[int], max_new: int) -> int:
+    def add_request(self, req_id: int, prompt: List[int], max_new: int,
+                    carry_tokens: Optional[List[int]] = None,
+                    carry_lps: Optional[List[float]] = None) -> int:
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slot")
         slot = free[0]
         t0 = time.perf_counter()
-        S = _bucket(len(prompt))
+        carry_tokens = carry_tokens or []
+        carry_lps = carry_lps or []
+        full_prompt = list(prompt) + carry_tokens
+        S = _bucket(len(full_prompt))
         S = min(S, self.max_len)
         padded = np.zeros((1, S), np.int32)
-        toks = prompt[-S:]
+        toks = full_prompt[-S:]
         padded[0, :len(toks)] = toks
-        one_cache = transformer.init_cache(self.cfg, 1, self.max_len)
-        logits, one_cache = self._prefill(
-            self.params, jnp.asarray(padded), one_cache,
-            jnp.asarray([len(toks)], jnp.int32))
-        self.cache = self._insert(self.cache, one_cache, slot)
+
+        if self.kv_backend == "paged":
+            pages = self.alloc.alloc_for(slot, len(toks))   # MemoryError if dry
+            self._track_peak()
+            self.block_table[slot, :] = -1
+            self.block_table[slot, :len(pages)] = pages
+            self._push_table()
+            logits, self.cache = self._prefill_paged(
+                self.params, jnp.asarray(padded), self.cache,
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(len(toks), jnp.int32))
+        else:
+            one_cache = transformer.init_cache(self.cfg, 1, self.max_len)
+            logits, one_cache = self._prefill(
+                self.params, jnp.asarray(padded), one_cache,
+                jnp.asarray([len(toks)], jnp.int32))
+            self.cache = self._insert(self.cache, one_cache, slot)
+
         s = self.slots[slot]
         s.req_id, s.active = req_id, True
-        s.tokens, s.logprobs = [], []
-        s.max_new, s.generated = max_new, 0
+        s.prompt = list(prompt)
+        s.tokens, s.logprobs = list(carry_tokens), list(carry_lps)
+        s.max_new, s.generated = max_new, len(carry_tokens)
+        s.ctx_len = len(toks)
+        s.evicted = False
+        s.arrival = self._arrivals
+        self._arrivals += 1
         # sample the first token from prefill logits
         self.key, sub = jax.random.split(self.key)
         tok = sample(logits, sub, self.sampler)
@@ -128,8 +296,37 @@ class InferenceEngine:
         s.logprobs.append(lp)
         s.generated += 1
         self.tokens_generated += 1
-        if tok == self.eos_id or s.generated >= s.max_new:
+        # context capacity counts as completion: decoding past max_len would
+        # overwrite live cache positions (in either backend), so both
+        # backends stop at the same point and stay bit-identical
+        if (tok == self.eos_id or s.generated >= s.max_new
+                or s.ctx_len >= self.max_len):
             s.active = False
+            if self.kv_backend == "paged":
+                self._release_slot_pages(slot)
+
+    def _grow_pages(self):
+        """Before a decode step, map a page for every active slot about to
+        cross a page boundary; evict the youngest request when the pool is
+        dry. Raises MemoryError only if a lone request cannot grow."""
+        changed = False
+        for i, s in enumerate(self.slots):
+            if not s.active or s.ctx_len >= self.max_len:
+                continue
+            while True:
+                try:
+                    newp = self.alloc.extend(i, s.ctx_len + 1)
+                    break
+                except MemoryError:
+                    if not self._evict_youngest(protect=i):
+                        raise
+            if newp is not None:
+                n_owned = len(self.alloc.owned[i])
+                self.block_table[i, n_owned - 1] = newp
+                changed = True
+                self._track_peak()
+        if changed:
+            self._push_table()
 
     def step(self) -> bool:
         """One decode step for all active slots. Returns True if work done."""
@@ -137,6 +334,11 @@ class InferenceEngine:
         if not active:
             return False
         t0 = time.perf_counter()
+        if self.kv_backend == "paged":
+            self._grow_pages()
+            active = [i for i, s in enumerate(self.slots) if s.active]
+            if not active:
+                return False
         last = np.zeros((self.max_batch, 1), np.int32)
         for i, s in enumerate(self.slots):
             last[i, 0] = s.tokens[-1] if s.tokens else 0
@@ -146,6 +348,8 @@ class InferenceEngine:
         toks = np.asarray(sample(logits, sub, self.sampler))
         lps = np.asarray(token_logprob(logits, jnp.asarray(toks)))
         for i in active:
+            self.slots[i].ctx_len = min(self.slots[i].ctx_len + 1,
+                                        self.max_len)
             self._commit(i, int(toks[i]), float(lps[i]))
         self.busy_s += time.perf_counter() - t0
         return True
@@ -155,22 +359,40 @@ class InferenceEngine:
                  ) -> List[Tuple[List[int], List[float]]]:
         """Batch-generate; returns (tokens, logprobs) per prompt."""
         results: Dict[int, Tuple[List[int], List[float]]] = {}
-        pending = list(enumerate(prompts))
+        pending: List[_Resume] = [
+            _Resume(req_id=i, prompt=p, max_new=max_new,
+                    carry_tokens=[], carry_lps=[])
+            for i, p in enumerate(prompts)]
         submitted: Dict[int, int] = {}          # req_id -> slot
         while pending or any(s.active for s in self.slots):
             while pending and self.free_slots():
-                rid, prompt = pending.pop(0)
-                slot = self.add_request(rid, prompt, max_new)
-                submitted[rid] = slot
-            if not self.step():
-                pass
+                r = pending[0]
+                if not self.can_admit(len(r.prompt) + len(r.carry_tokens)):
+                    if not any(s.active for s in self.slots):
+                        raise MemoryError(
+                            f"request {r.req_id} cannot fit in the page pool")
+                    break                        # wait for pages to free
+                pending.pop(0)
+                slot = self.add_request(r.req_id, r.prompt, r.max_new,
+                                        carry_tokens=r.carry_tokens,
+                                        carry_lps=r.carry_lps)
+                submitted[r.req_id] = slot
+            self.step()
             done = [rid for rid, sl in submitted.items()
                     if not self.slots[sl].active]
             for rid in done:
                 sl = submitted.pop(rid)
                 s = self.slots[sl]
-                results[rid] = (list(s.tokens), list(s.logprobs))
                 s.req_id = -1
+                if s.evicted:
+                    s.evicted = False
+                    continue                     # resubmitted via _resume_queue
+                results[rid] = (list(s.tokens), list(s.logprobs))
+            if self._resume_queue:
+                # preempted work goes to the queue head, oldest first
+                # (victims were queued youngest-first as eviction found them)
+                pending[:0] = reversed(self._resume_queue)
+                self._resume_queue.clear()
         return [results[i] for i in range(len(prompts))]
 
     def score(self, tokens: List[int]) -> Tuple[float, np.ndarray]:

@@ -3,6 +3,10 @@ import os
 # Tests run on the single real CPU device (the 512-placeholder flag is ONLY
 # set inside repro.launch.dryrun, which tests run as a subprocess if at all).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Tier-1 wall time is dominated by XLA:CPU compile time of tiny test models;
+# dropping the backend optimization level halves the suite with identical
+# semantics (fast-math stays off). Honors any user-provided XLA_FLAGS.
+os.environ.setdefault("XLA_FLAGS", "--xla_backend_optimization_level=0")
 
 import jax
 import pytest

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow        # trains a reward model: ~25 s on CPU
+
 from repro.configs.pice_cloud_edge import TINY_EDGE_B
 from repro.data import corpus as corpus_lib
 from repro.finetune.preference import (PreferenceTriple, label_pair,

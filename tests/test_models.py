@@ -12,6 +12,17 @@ from repro.training import optimizer as opt_lib
 
 CONFIGS = all_configs()
 
+# init_params costs seconds per arch on CPU; the three per-arch test families
+# use shape-identical reduced configs, so share one init per (arch, overrides
+# that change param shapes — here: none do).
+_PARAMS_CACHE = {}
+
+
+def _params_for(arch, r, key):
+    if arch not in _PARAMS_CACHE:
+        _PARAMS_CACHE[arch] = transformer.init_params(r, key)
+    return _PARAMS_CACHE[arch]
+
 
 def _batch_for(r, key, B=2, S=32):
     toks = jax.random.randint(key, (B, S), 0, r.vocab_size)
@@ -28,12 +39,12 @@ def _batch_for(r, key, B=2, S=32):
 @pytest.mark.parametrize("arch", sorted(ALIASES))
 def test_arch_forward_shapes_no_nan(arch, rng_key):
     r = CONFIGS[arch].reduced(remat=False)
-    params = transformer.init_params(r, rng_key)
+    params = _params_for(arch, r, rng_key)
     batch = _batch_for(r, rng_key)
-    logits, aux = transformer.forward(
-        r, params, batch["tokens"],
-        prefix_embeds=batch.get("prefix_embeds"),
-        enc_frames=batch.get("enc_frames"))
+    logits, aux = jax.jit(lambda p, b: transformer.forward(
+        r, p, b["tokens"],
+        prefix_embeds=b.get("prefix_embeds"),
+        enc_frames=b.get("enc_frames")))(params, batch)
     B, S = batch["tokens"].shape
     extra = r.n_prefix_tokens if r.family == "vlm" else 0
     assert logits.shape == (B, S + extra, r.vocab_size)
@@ -41,10 +52,18 @@ def test_arch_forward_shapes_no_nan(arch, rng_key):
     assert np.isfinite(float(aux))
 
 
-@pytest.mark.parametrize("arch", sorted(ALIASES))
+# One representative per family in tier-1 (train-step compiles are the most
+# expensive thing in this file); the remaining archs run under -m slow.
+_TRAIN_FAMILY_REPS = {"qwen2-1.5b", "mixtral-8x7b", "xlstm-1.3b",
+                      "zamba2-2.7b", "whisper-tiny", "internvl2-2b"}
+
+
+@pytest.mark.parametrize("arch", [
+    a if a in _TRAIN_FAMILY_REPS else pytest.param(a, marks=pytest.mark.slow)
+    for a in sorted(ALIASES)])
 def test_arch_train_step(arch, rng_key):
     r = CONFIGS[arch].reduced(remat=False)
-    params = transformer.init_params(r, rng_key)
+    params = _params_for(arch, r, rng_key)
     opt_state = opt_lib.init_opt_state(params)
     step = jax.jit(steps_lib.make_train_step(r, opt_lib.AdamWConfig(lr=1e-3)))
     batch = _batch_for(r, rng_key, B=2, S=16)
@@ -69,7 +88,7 @@ def test_decode_matches_forward(arch, rng_key):
     if CONFIGS[arch].is_moe:
         over["capacity_factor"] = 8.0        # no token dropping
     r = CONFIGS[arch].reduced(**over)
-    params = transformer.init_params(r, rng_key)
+    params = _params_for(arch, r, rng_key)
     B, S0, N, MAX = 2, 8, 5, 64
     toks = jax.random.randint(rng_key, (B, S0 + N), 0, r.vocab_size)
     kw = {}
@@ -80,12 +99,13 @@ def test_decode_matches_forward(arch, rng_key):
         kw["prefix_embeds"] = jax.random.normal(
             rng_key, (B, r.n_prefix_tokens, r.d_model), jnp.float32)
     cache = transformer.init_cache(r, B, MAX)
-    logits, cache = transformer.prefill(r, params, toks[:, :S0], cache, **kw)
+    logits, cache = jax.jit(
+        lambda p, t, c: transformer.prefill(r, p, t, c, **kw))(
+        params, toks[:, :S0], cache)
+    decode = jax.jit(lambda p, t, c: transformer.decode_step(r, p, t, c))
     outs = [logits]
     for i in range(N):
-        logits, cache = transformer.decode_step(r, params,
-                                                toks[:, S0 + i:S0 + i + 1],
-                                                cache)
+        logits, cache = decode(params, toks[:, S0 + i:S0 + i + 1], cache)
         outs.append(logits)
     dec = jnp.stack(outs[:-1], 1)
     fw, _ = transformer.forward(r, params, toks, **kw)
@@ -99,15 +119,17 @@ def test_sliding_window_cache_ring_buffer(rng_key):
     """Windowed decode must equal full-cache decode restricted to the window."""
     r = CONFIGS["mixtral-8x7b"].reduced(remat=False, dtype="float32",
                                         sliding_window=8, capacity_factor=8.0)
-    params = transformer.init_params(r, rng_key)
+    params = _params_for("mixtral-8x7b", r, rng_key)
     B, S0, N = 1, 12, 8              # crosses the window boundary
     toks = jax.random.randint(rng_key, (B, S0 + N), 0, r.vocab_size)
     cache = transformer.init_cache(r, B, 64)
-    logits, cache = transformer.prefill(r, params, toks[:, :S0], cache)
+    logits, cache = jax.jit(
+        lambda p, t, c: transformer.prefill(r, p, t, c))(
+        params, toks[:, :S0], cache)
+    decode = jax.jit(lambda p, t, c: transformer.decode_step(r, p, t, c))
     outs = [logits]
     for i in range(N):
-        logits, cache = transformer.decode_step(
-            r, params, toks[:, S0 + i:S0 + i + 1], cache)
+        logits, cache = decode(params, toks[:, S0 + i:S0 + i + 1], cache)
         outs.append(logits)
     dec = jnp.stack(outs[:-1], 1)
     fw, _ = transformer.forward(r, params, toks)
@@ -119,7 +141,7 @@ def test_sliding_window_cache_ring_buffer(rng_key):
 def test_variable_prompt_lengths(rng_key):
     """Right-padded prefill must match per-request unpadded prefill."""
     r = CONFIGS["qwen2-1.5b"].reduced(remat=False, dtype="float32")
-    params = transformer.init_params(r, rng_key)
+    params = _params_for("qwen2-1.5b", r, rng_key)
     toks = jax.random.randint(rng_key, (2, 12), 0, r.vocab_size)
     lens = jnp.array([7, 12])
     cache = transformer.init_cache(r, 2, 32)

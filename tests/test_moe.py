@@ -3,6 +3,11 @@ load-balance loss behavior."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-test.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models import moe as moe_lib

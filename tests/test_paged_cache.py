@@ -1,9 +1,15 @@
 """Paged KV cache: equivalence with the contiguous cache + allocator
-invariants (hypothesis)."""
+invariants (property-based under hypothesis, fixed examples without it)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.decode_attention import ref as da_ref
 from repro.models import paged_cache as pc
@@ -56,10 +62,7 @@ def test_write_token_lands_in_right_page():
     assert float(pages_v[2, 1, 0, 0]) == 2.0
 
 
-@given(st.lists(st.integers(min_value=1, max_value=100), min_size=1,
-                max_size=12))
-@settings(max_examples=40, deadline=None)
-def test_allocator_conservation(lengths):
+def _check_allocator_conservation(lengths):
     alloc = pc.PageAllocator(n_pages=256, page_size=8, max_pages_per_seq=16)
     total = alloc.n_pages
     for slot, n in enumerate(lengths):
@@ -72,6 +75,54 @@ def test_allocator_conservation(lengths):
         alloc.release(slot)
     assert len(alloc.free) == total
     assert alloc.utilization == 0.0
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.integers(min_value=1, max_value=100), min_size=1,
+                    max_size=12))
+    @settings(max_examples=40, deadline=None)
+    def test_allocator_conservation(lengths):
+        _check_allocator_conservation(lengths)
+else:
+    @pytest.mark.parametrize("lengths", [
+        [1], [100], [8, 16, 3], [7] * 12, list(range(1, 13))])
+    def test_allocator_conservation(lengths):
+        _check_allocator_conservation(lengths)
+
+
+def test_write_prompt_scatter_and_unmapped_drop():
+    """write_prompt lands each position in its page; padding beyond the
+    prompt length and unmapped (-1) table rows never touch the pool."""
+    kv, hd, page, P = 2, 4, 4, 3
+    pages_k = jnp.zeros((8, page, kv, hd))
+    pages_v = jnp.zeros((8, page, kv, hd))
+    row = jnp.asarray([5, 1, -1], jnp.int32)
+    S = 12
+    k = jnp.arange(1, S + 1, dtype=jnp.float32)[None, :, None, None] \
+        * jnp.ones((1, S, kv, hd))
+    pk, pv = pc.write_prompt(pages_k, pages_v, row, k, 2 * k,
+                             jnp.asarray(6, jnp.int32))
+    # positions 0..3 -> page 5, positions 4..5 -> page 1, rest dropped
+    np.testing.assert_allclose(np.asarray(pk[5, :, 0, 0]), [1, 2, 3, 4])
+    np.testing.assert_allclose(np.asarray(pk[1, :2, 0, 0]), [5, 6])
+    assert float(jnp.abs(pk[1, 2:]).sum()) == 0.0      # beyond prompt_len
+    untouched = [p for p in range(8) if p not in (1, 5)]
+    for p in untouched:
+        assert float(jnp.abs(pk[p]).sum()) == 0.0
+    np.testing.assert_allclose(np.asarray(pv[5, :, 0, 0]), [2, 4, 6, 8])
+
+
+def test_write_token_unmapped_row_is_dropped():
+    """A freed slot (block-table row -1) must not corrupt the pool — its
+    pages may already belong to another request."""
+    kv, hd, page = 1, 2, 4
+    pages_k = jnp.ones((4, page, kv, hd))
+    pages_v = jnp.ones((4, page, kv, hd))
+    table = jnp.asarray([[-1, -1]], jnp.int32)
+    nk = jnp.full((1, 1, kv, hd), 9.0)
+    pk, pv = pc.write_token(pages_k, pages_v, table, jnp.asarray([2]), nk, nk)
+    np.testing.assert_allclose(np.asarray(pk), np.ones((4, page, kv, hd)))
+    np.testing.assert_allclose(np.asarray(pv), np.ones((4, page, kv, hd)))
 
 
 def test_allocator_extend_and_exhaustion():

@@ -4,6 +4,11 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-test.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import metrics as M

@@ -7,6 +7,8 @@ sketch -> dispatch -> parallel edge expansion -> ensemble -> response.
 import jax
 import pytest
 
+pytestmark = pytest.mark.slow        # trains real engines: minutes on CPU
+
 from repro.configs.pice_cloud_edge import TINY_CLOUD, TINY_EDGE_CONFIGS
 from repro.core import metrics as M
 from repro.core.progressive import PICEConfig, PICEPipeline

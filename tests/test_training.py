@@ -7,6 +7,9 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow        # real training loops: ~20 s on CPU
 
 from repro.configs.pice_cloud_edge import TINY_EDGE_B
 from repro.data import corpus as corpus_lib
