@@ -1,4 +1,5 @@
-"""Dense vs paged serving-engine throughput under request-length skew.
+"""Dense vs paged serving-engine throughput under request-length skew, plus
+the PICE ensemble fan-out under copy-on-write prefix sharing.
 
 For each workload the same prompt stream runs through both KV backends of
 `InferenceEngine` (greedy decode, so outputs are identical) and we report
@@ -7,10 +8,19 @@ backend's pool is sized to the workload's *mean* demand, not the dense
 worst case (max_batch x max_len), which is where its win comes from: at
 high length skew most dense slot memory is dead reservation.
 
-  PYTHONPATH=src python -m benchmarks.paged_engine_bench
+The fan-out scenario prefills one (query, sketch)-style prefix and expands
+it N ways — once as N independent submissions, once through the COW fork
+path (`generate_fanout`) — and reports the peak page usage of each. The
+shared path must stay well under N x the unshared reservation (< 0.6x is
+asserted, so CI smoke runs catch a silent regression to per-slot prefills).
+
+  PYTHONPATH=src python -m benchmarks.paged_engine_bench [--smoke]
+
+--smoke shrinks the workloads to a few requests/steps for CI.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -26,6 +36,8 @@ MAX_LEN = 256
 PAGE = 16
 N_REQ = 24
 MAX_NEW = 32
+FANOUT = 6
+FANOUT_PREFIX = 128          # 8 pages: a typical query+sketch expansion prefix
 
 # request-length-skew settings: (name, prompt-length sampler)
 WORKLOADS = [
@@ -36,34 +48,29 @@ WORKLOADS = [
 ]
 
 
-def _prompts(sampler, seed: int):
+def _prompts(sampler, seed: int, n_req: int):
     rng = np.random.default_rng(seed)
     return [[int(t) for t in rng.integers(1, 250, size=sampler(rng))]
-            for _ in range(N_REQ)]
+            for _ in range(n_req)]
 
 
-def _run(engine: InferenceEngine, prompts):
+def _run(engine: InferenceEngine, prompts, max_new: int):
     engine.generate([prompts[0]], max_new=4)       # warmup / compile
     base = engine.tokens_generated
     t0 = time.perf_counter()
-    engine.generate(prompts, max_new=MAX_NEW)
+    engine.generate(prompts, max_new=max_new)
     dt = time.perf_counter() - t0
     return (engine.tokens_generated - base) / dt, dt
 
 
-def run():
-    cfg = TINY_EDGE_A.with_(dtype="float32")
-    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
-    kv_bytes_per_tok = (2 * cfg.n_layers * cfg.n_kv_heads
-                       * cfg.resolved_head_dim * 4)
-
+def _run_workloads(cfg, params, kv_bytes_per_tok, n_req, max_new):
     for wi, (name, sampler) in enumerate(WORKLOADS):
-        prompts = _prompts(sampler, seed=97 + wi)
-        demand = sum(min(len(p), MAX_LEN) + MAX_NEW for p in prompts)
+        prompts = _prompts(sampler, seed=97 + wi, n_req=n_req)
+        demand = sum(min(len(p), MAX_LEN) + max_new for p in prompts)
 
         dense = InferenceEngine(cfg, params, max_batch=MAX_BATCH,
                                 max_len=MAX_LEN)
-        tps, dt = _run(dense, prompts)
+        tps, dt = _run(dense, prompts, max_new)
         dense_bytes = MAX_BATCH * MAX_LEN * kv_bytes_per_tok
         emit(f"paged_engine/{name}_dense", dt * 1e6,
              f"tok_s={tps:.1f};kv_bytes={dense_bytes:.2e}")
@@ -74,7 +81,7 @@ def run():
         paged = InferenceEngine(cfg, params, max_batch=MAX_BATCH,
                                 max_len=MAX_LEN, kv_backend="paged",
                                 page_size=PAGE, n_pages=n_pages)
-        tps_p, dt_p = _run(paged, prompts)
+        tps_p, dt_p = _run(paged, prompts, max_new)
         paged_bytes = n_pages * PAGE * kv_bytes_per_tok
         st = paged.memory_stats()
         emit(f"paged_engine/{name}_paged", dt_p * 1e6,
@@ -86,5 +93,62 @@ def run():
               f"paged/dense={tps_p / tps:.2f}")
 
 
+def _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len, max_new):
+    """N-way expansion of one shared prefix: independent vs COW fork path."""
+    rng = np.random.default_rng(211)
+    prefix = [int(t) for t in rng.integers(1, 250, size=prefix_len)]
+    kw = dict(max_batch=fanout + 1, max_len=MAX_LEN, kv_backend="paged",
+              page_size=PAGE)
+
+    unshared = InferenceEngine(cfg, params, **kw)
+    unshared.generate([prefix], max_new=4)         # warmup / compile
+    unshared.peak_pages = 0
+    t0 = time.perf_counter()
+    out_u = unshared.generate([prefix] * fanout, max_new=max_new)
+    dt_u = time.perf_counter() - t0
+    peak_u = unshared.memory_stats()["peak_pages"]
+    emit(f"paged_engine/fanout{fanout}_unshared", dt_u * 1e6,
+         f"peak_pages={peak_u};kv_bytes={peak_u * PAGE * kv_bytes_per_tok:.2e}")
+
+    shared = InferenceEngine(cfg, params, **kw)
+    shared.generate([prefix], max_new=4)
+    shared.peak_pages = 0
+    t0 = time.perf_counter()
+    out_s = shared.generate_fanout(prefix, [[] for _ in range(fanout)],
+                                   max_new=max_new)
+    dt_s = time.perf_counter() - t0
+    peak_s = shared.memory_stats()["peak_pages"]
+    emit(f"paged_engine/fanout{fanout}_shared", dt_s * 1e6,
+         f"peak_pages={peak_s};kv_bytes={peak_s * PAGE * kv_bytes_per_tok:.2e}"
+         f";ratio={peak_s / max(peak_u, 1):.2f}")
+    print(f"# fanout x{fanout}: prefix {prefix_len} tok "
+          f"({prefix_len // PAGE} pages); peak pages unshared={peak_u} "
+          f"shared={peak_s} ({peak_s / max(peak_u, 1):.0%})")
+
+    # regression guards: the fork path must stay bit-identical to the
+    # independent submissions AND far under the unshared reservation —
+    # a silent fallback to per-slot prefills would fail here
+    assert out_s == out_u, "fan-out diverged from independent submissions"
+    assert peak_s < 0.6 * peak_u, \
+        f"fan-out peak {peak_s} not < 0.6 x unshared {peak_u}"
+
+
+def run(smoke: bool = False):
+    cfg = TINY_EDGE_A.with_(dtype="float32")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    kv_bytes_per_tok = (2 * cfg.n_layers * cfg.n_kv_heads
+                       * cfg.resolved_head_dim * 4)
+
+    n_req, max_new = (6, 8) if smoke else (N_REQ, MAX_NEW)
+    _run_workloads(cfg, params, kv_bytes_per_tok, n_req, max_new)
+    fanout, prefix_len, fan_new = (4, 80, 8) if smoke else (FANOUT,
+                                                            FANOUT_PREFIX,
+                                                            MAX_NEW)
+    _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len, fan_new)
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config / few steps (CI)")
+    run(smoke=ap.parse_args().smoke)

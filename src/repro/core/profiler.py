@@ -101,9 +101,14 @@ class RuntimeMonitor:
     net_bandwidth_mbps: float = 100.0
     net_rtt_s: float = 0.02
     # engine KV-memory telemetry (paged backend): the scheduler admits work
-    # against real page-pool pressure instead of a fixed max_batch
+    # against real page-pool pressure instead of a fixed max_batch.
+    # `used` is PHYSICAL occupancy (shared pages counted once); `logical` is
+    # what an unshared layout would hold — the gap is the copy-on-write
+    # prefix-sharing saving; `shared` is physical pages referenced >1 time.
     kv_pages_total: int = 0
     kv_pages_used: int = 0
+    kv_pages_shared: int = 0
+    kv_pages_logical: int = 0
     kv_evictions: int = 0
 
     def on_enqueue(self, expected_tokens: float):
@@ -116,30 +121,62 @@ class RuntimeMonitor:
             0.0, self.queued_expected_tokens - expected_tokens)
 
     def update_memory(self, pages_used: int, pages_total: int,
-                      evictions: int = 0):
+                      evictions: int = 0, pages_shared: int = 0,
+                      pages_logical: int = 0):
         self.kv_pages_used = pages_used
         self.kv_pages_total = pages_total
         self.kv_evictions = evictions
+        self.kv_pages_shared = pages_shared
+        self.kv_pages_logical = max(pages_logical, pages_used)
 
     def observe_engines(self, engines) -> None:
         """Aggregate KV memory pressure across a fleet of InferenceEngines.
 
-        Uses each engine's windowed peak (`consume_peak`) rather than its
+        Uses each engine's windowed peak (`consume_window`) rather than its
         instantaneous occupancy: in the synchronous pipeline pools drain to
         zero between requests, so only the high-water mark since the last
         observation carries signal."""
-        used = total = ev = 0
+        used = total = ev = shared = logical = 0
         for eng in engines:
             st = eng.memory_stats()
-            peak = eng.consume_peak() if hasattr(eng, "consume_peak") \
-                else int(st.get("pages_in_use", 0))
-            used += peak
+            if hasattr(eng, "consume_window"):
+                w = eng.consume_window()
+                used += w["pages"]
+                shared += w["shared"]
+                logical += w["logical"]
+            elif hasattr(eng, "consume_peak"):
+                peak = eng.consume_peak()
+                used += peak
+                logical += peak
+            else:
+                cur = int(st.get("pages_in_use", 0))
+                used += cur
+                logical += cur
             total += int(st.get("pages_total", 0))
             ev += int(st.get("evictions", 0))
-        self.update_memory(used, total, ev)
+        self.update_memory(used, total, ev, pages_shared=shared,
+                           pages_logical=logical)
 
     @property
     def kv_utilization(self) -> float:
+        """Physical pool occupancy — COW sharing lowers this directly."""
         if self.kv_pages_total <= 0:
             return 0.0
         return self.kv_pages_used / self.kv_pages_total
+
+    @property
+    def kv_shared_fraction(self) -> float:
+        """Fraction of used pages referenced by >1 slot. High values mean
+        the occupancy is mostly shared prefixes: extra fan-out members are
+        nearly free, but single-fork eviction reclaims little."""
+        if self.kv_pages_used <= 0:
+            return 0.0
+        return self.kv_pages_shared / self.kv_pages_used
+
+    @property
+    def kv_sharing_savings(self) -> float:
+        """1 - physical/logical: how much of the unshared footprint COW
+        prefix sharing is currently absorbing."""
+        if self.kv_pages_logical <= 0:
+            return 0.0
+        return 1.0 - self.kv_pages_used / self.kv_pages_logical

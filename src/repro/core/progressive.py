@@ -133,22 +133,35 @@ class PICEPipeline:
         self.monitor.on_dequeue(l_i)
 
         # expand groups on the ensemble of edge engines; under KV-memory
-        # pressure fall back to the primary model alone (ensembling doubles
-        # the page footprint for a marginal quality gain)
+        # pressure fall back to the primary model alone — unless the fleet
+        # is already absorbing the fan-out via COW prefix sharing (mostly-
+        # shared occupancy means an extra member costs tail pages, not a
+        # second prefix)
         names = self._ensemble_names(primary)
-        if self.monitor.kv_utilization > 0.85:
+        if (self.monitor.kv_utilization > 0.85
+                and self.monitor.kv_shared_fraction <= 0.5):
             names = names[:1]
         per_tok = max(len(tok.encode(" ".join(g))) for g in plan.groups)
         max_new = min(int(per_tok * 3.5) + 24, req.max_new_tokens)
-        group_prompts = [sketch_lib.edge_expand_prompt(req.query, sketch_text, g)
-                         for g in plan.groups]
+        # the exec-optimizer's parallel segments all repeat the same
+        # (query, sketch) context: prefill it once per engine and fork the
+        # per-group suffixes off it (paged backend; dense falls back to
+        # independent submissions inside generate_fanout)
+        prefix_toks = tok.encode(
+            sketch_lib.edge_expand_prefix(req.query, sketch_text))
+        suffix_toks = [tok.encode(sketch_lib.edge_expand_suffix(g))
+                       for g in plan.groups]
         chosen: List[str] = []
         total_conf, edge_tokens = 0.0, 0
         group_results = {}
         for name in names:
             eng = self.edges[name]
-            prompts = [tok.encode(p) for p in group_prompts]
-            outs = eng.generate(prompts, max_new=max_new)
+            if hasattr(eng, "generate_fanout"):
+                outs = eng.generate_fanout(prefix_toks, suffix_toks,
+                                           max_new=max_new)
+            else:
+                outs = eng.generate([prefix_toks + sfx for sfx in suffix_toks],
+                                    max_new=max_new)
             group_results[name] = outs
         for gi in range(len(plan.groups)):
             cands = []

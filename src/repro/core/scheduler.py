@@ -65,8 +65,22 @@ class DynamicScheduler:
         """Queueing-delay inflation from KV page-pool occupancy (M/M/1-style
         1/(1-rho)). At util 0 (dense backend / no telemetry) this is 1.0, so
         the seed behavior is unchanged; near exhaustion waits blow up and the
-        scheduler backs off to shorter sketches / cloud_full."""
-        rho = min(self.monitor.kv_utilization, 0.95)
+        scheduler backs off to shorter sketches / cloud_full.
+
+        rho is the *physical* occupancy, so copy-on-write prefix sharing
+        lowers the factor directly (an N-way fan-out pins one prefix, not N).
+        The flip side: shared pages cannot be reclaimed by evicting a single
+        fork, so when most of the used pool is shared the evictable headroom
+        shrinks — rho is nudged toward the logical (unshared-equivalent)
+        load in proportion to the shared fraction."""
+        util = min(self.monitor.kv_utilization, 0.95)
+        # non-reclaimable share of the occupancy: at shared_fraction 0 this
+        # is plain physical rho; at 1.0 (eviction frees nothing) rho climbs
+        # toward saturation by util/2 of the remaining headroom — the extra
+        # util factor keeps the nudge negligible when the pool is near-empty
+        rho = util + 0.5 * self.monitor.kv_shared_fraction * (0.95 - util) \
+            * util
+        rho = min(rho, 0.95)
         return 1.0 / (1.0 - rho)
 
     # -- Eq. (2) -----------------------------------------------------------

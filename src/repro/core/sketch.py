@@ -33,11 +33,24 @@ def cloud_sketch_prompt(query: str, max_sketch_tokens: int) -> str:
     return f"Q: {query}\nS:"
 
 
+def edge_expand_prefix(query: str, sketch: str) -> str:
+    """The (query, sketch) context every parallel expansion group repeats —
+    with the byte-level tokenizer, encode(prefix) + encode(suffix) ==
+    encode(prefix + suffix), so the serving engine can prefill this once and
+    fan groups out over copy-on-write shared KV pages."""
+    return f"Q: {query}\nS: {sketch}\nE: "
+
+
+def edge_expand_suffix(sentences: List[str]) -> str:
+    """The per-group tail of the expansion prompt (see edge_expand_prefix)."""
+    sent = ". ".join(s.rstrip(".") for s in sentences)
+    return f"{sent}|"
+
+
 def edge_expand_prompt(query: str, sketch: str, sentences: List[str]) -> str:
     """The paper's §IV-B template, adapted to the testbed grammar; merged
     groups concatenate their sentences ('complete only this sentence')."""
-    sent = ". ".join(s.rstrip(".") for s in sentences)
-    return f"Q: {query}\nS: {sketch}\nE: {sent}|"
+    return edge_expand_prefix(query, sketch) + edge_expand_suffix(sentences)
 
 
 def segment_sketch(sketch_text: str) -> List[str]:

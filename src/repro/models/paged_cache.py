@@ -83,9 +83,20 @@ def write_prompt(pages_k: jax.Array, pages_v: jax.Array, block_row: jax.Array,
     return pages_k, pages_v
 
 
+def copy_page(pages: jax.Array, src: int, dst: int) -> jax.Array:
+    """Copy one physical page across all layers of a segment's pool.
+
+    pages: (count, n_pages, page, kv, hd). src == dst is a no-op copy, used
+    when a fork has no partial tail page to duplicate."""
+    return pages.at[:, dst].set(pages[:, src])
+
+
 @dataclasses.dataclass
 class PageAllocator:
-    """Host-side page bookkeeping (free list + per-slot page chains)."""
+    """Host-side page bookkeeping: free list + per-slot page chains, with
+    per-page refcounts so forks can share read-only prefix pages
+    copy-on-write (`fork` / `cow_page`). A page returns to the free list
+    only when its last reference is released."""
     n_pages: int
     page_size: int
     max_pages_per_seq: int
@@ -93,13 +104,19 @@ class PageAllocator:
     def __post_init__(self):
         self.free: List[int] = list(range(self.n_pages))
         self.owned: dict = {}
+        self.refcount: List[int] = [0] * self.n_pages
+
+    def _take(self) -> int:
+        p = self.free.pop()
+        self.refcount[p] = 1
+        return p
 
     def alloc_for(self, slot: int, n_tokens: int) -> List[int]:
         need = max(1, -(-n_tokens // self.page_size))
         assert need <= self.max_pages_per_seq, "sequence exceeds block table"
         if len(self.free) < need:
             raise MemoryError("page pool exhausted")
-        pages = [self.free.pop() for _ in range(need)]
+        pages = [self._take() for _ in range(need)]
         self.owned[slot] = pages
         return pages
 
@@ -111,17 +128,90 @@ class PageAllocator:
             return None
         if not self.free:
             raise MemoryError("page pool exhausted")
-        p = self.free.pop()
+        p = self._take()
         pages.append(p)
         self.owned[slot] = pages
         return p
 
+    def fork(self, src_slot: int, dst_slot: int, n_tokens: int
+             ) -> Tuple[List[int], int, int]:
+        """Share src's first `n_tokens` of pages with dst copy-on-write.
+
+        Full pages are shared (refcount++); a partial tail page — the page
+        the next token write would land in — is copied into a fresh page so
+        the fork can append without touching its siblings. Returns
+        (dst_pages, tail_src, tail_dst); tail ids are equal when the prefix
+        is page-aligned and nothing needs a device-side copy."""
+        src_pages = self.owned[src_slot]
+        assert dst_slot not in self.owned, "destination slot still owns pages"
+        assert 0 < n_tokens <= len(src_pages) * self.page_size
+        full = n_tokens // self.page_size
+        shared = src_pages[:full]
+        tail_src = tail_dst = 0
+        if n_tokens % self.page_size:
+            if not self.free:
+                raise MemoryError("page pool exhausted")
+            tail_src = src_pages[full]
+            tail_dst = self._take()
+        for p in shared:
+            self.refcount[p] += 1
+        dst_pages = list(shared)
+        if tail_src != tail_dst:
+            dst_pages.append(tail_dst)
+        self.owned[dst_slot] = dst_pages
+        return dst_pages, tail_src, tail_dst
+
+    def fork_cost(self, n_tokens: int) -> int:
+        """Free pages a fork of an n_tokens prefix consumes now (0 or 1)."""
+        return 1 if n_tokens % self.page_size else 0
+
+    def cow_page(self, slot: int, pos: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write guard before writing token position `pos`: if the
+        page holding it is shared, re-point the slot at a private copy.
+        Returns (old_page, new_page) for the device-side copy, or None when
+        the page is already uniquely owned (the common case — forks copy
+        their partial tail eagerly, so this triggers only on exotic chains).
+        """
+        pages = self.owned.get(slot, [])
+        idx = pos // self.page_size
+        if idx >= len(pages):
+            return None
+        p = pages[idx]
+        if self.refcount[p] <= 1:
+            return None
+        if not self.free:
+            raise MemoryError("page pool exhausted")
+        new = self._take()
+        self.refcount[p] -= 1
+        pages[idx] = new
+        return p, new
+
     def release(self, slot: int) -> None:
-        self.free.extend(self.owned.pop(slot, []))
+        for p in self.owned.pop(slot, []):
+            self.refcount[p] -= 1
+            assert self.refcount[p] >= 0, "refcount underflow"
+            if self.refcount[p] == 0:
+                self.free.append(p)
+
+    def unique_pages(self, slot: int) -> int:
+        """Pages only this slot references — what releasing it would free."""
+        return sum(1 for p in self.owned.get(slot, [])
+                   if self.refcount[p] == 1)
 
     @property
     def pages_in_use(self) -> int:
         return self.n_pages - len(self.free)
+
+    @property
+    def pages_shared(self) -> int:
+        """Physical pages referenced by more than one slot."""
+        return sum(1 for c in self.refcount if c > 1)
+
+    @property
+    def logical_pages(self) -> int:
+        """Sum of per-slot chain lengths (counts shared pages per reference);
+        logical - in_use is the memory COW sharing is saving."""
+        return sum(len(v) for v in self.owned.values())
 
     @property
     def utilization(self) -> float:

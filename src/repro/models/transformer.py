@@ -485,9 +485,24 @@ def _prefill_block_tail(cfg: ModelConfig, kind: str, blk: dict, x, newc,
 # Decode
 # ---------------------------------------------------------------------------
 
+def _advance_lengths(lengths: jax.Array,
+                     active: Optional[jax.Array]) -> jax.Array:
+    """Post-decode length update: only active rows consumed a token. Without
+    the mask, freed slots' lengths drift past max_len between requests and
+    keep issuing clipped cache writes."""
+    if active is None:
+        return lengths + 1
+    return lengths + active.astype(lengths.dtype)
+
+
 def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict,
-                mesh=None) -> Tuple[jax.Array, dict]:
-    """tokens: (B, 1) -> (logits (B, vocab), updated cache)."""
+                mesh=None, active: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, dict]:
+    """tokens: (B, 1) -> (logits (B, vocab), updated cache).
+
+    active: optional (B,) bool mask of live slots; inactive rows keep their
+    cached length (their writes land in freed space and are overwritten on
+    slot reuse)."""
     x = embed(cfg, params["embed"], tokens)
     lengths = cache["lengths"]
     if cfg.family == "encdec":
@@ -516,7 +531,8 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict,
     logits = unembed(cfg, params["embed"], x)[:, 0]
     if mesh is not None:
         logits = shd.constraint(logits, mesh, (shd.batch_axes(mesh), "model"))
-    new_cache = {"lengths": lengths + 1, "segments": new_segs}
+    new_cache = {"lengths": _advance_lengths(lengths, active),
+                 "segments": new_segs}
     return logits, new_cache
 
 
@@ -625,12 +641,15 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 
 def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
-                      cache: dict, mesh=None) -> Tuple[jax.Array, dict]:
+                      cache: dict, mesh=None,
+                      active: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, dict]:
     """tokens: (B, 1) -> (logits (B, vocab), updated paged cache).
 
     Attention layers append the new token into their page pools through the
     block table and read via the gather path; recurrent layers are identical
-    to the dense decode.
+    to the dense decode. `active` masks freed rows' length advance (their
+    block-table rows are -1, so their writes are already dropped).
     """
     _check_paged_support(cfg)
     x = embed(cfg, params["embed"], tokens)
@@ -663,9 +682,40 @@ def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     logits = unembed(cfg, params["embed"], x)[:, 0]
     if mesh is not None:
         logits = shd.constraint(logits, mesh, (shd.batch_axes(mesh), "model"))
-    new_cache = {"lengths": lengths + 1, "block_table": table,
-                 "segments": new_segs}
+    new_cache = {"lengths": _advance_lengths(lengths, active),
+                 "block_table": table, "segments": new_segs}
     return logits, new_cache
+
+
+def fork_slot_paged(cfg: ModelConfig, cache: dict, src_slot, dst_slot,
+                    tail_src_page, tail_dst_page) -> dict:
+    """Device-side state duplication behind copy-on-write prefix sharing.
+
+    Full prefix pages are shared through the block table (host side, see
+    `PageAllocator.fork`); this op copies only what cannot be shared — the
+    partial tail page of every attention layer (pass tail_src_page ==
+    tail_dst_page for a no-op when the prefix is page-aligned) and the O(1)
+    per-slot recurrent states — then mirrors the source row's cached length.
+    Also serves plain COW page copies: call with src_slot == dst_slot and
+    the (old, new) page pair from `PageAllocator.cow_page`.
+    """
+    _check_paged_support(cfg)
+    from repro.models import paged_cache as pc
+    new_segs = []
+    for (kind, count), segc in zip(segments_of(cfg), cache["segments"]):
+        if kind in (ATTN, MOE, SHARED_ATTN):
+            new_segs.append({
+                "k_pages": pc.copy_page(segc["k_pages"], tail_src_page,
+                                        tail_dst_page),
+                "v_pages": pc.copy_page(segc["v_pages"], tail_src_page,
+                                        tail_dst_page),
+            })
+        else:
+            new_segs.append(jax.tree.map(
+                lambda a: a.at[:, dst_slot].set(a[:, src_slot]), segc))
+    lengths = cache["lengths"].at[dst_slot].set(cache["lengths"][src_slot])
+    return {"lengths": lengths, "block_table": cache["block_table"],
+            "segments": new_segs}
 
 
 def _decode_block_paged(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,

@@ -77,18 +77,30 @@ def _insert_fn(big, one, slot):
     return out
 
 
+def _decode_dense_fn(cfg, params, tokens, cache, active):
+    return transformer.decode_step(cfg, params, tokens, cache, active=active)
+
+
+def _decode_paged_fn(cfg, params, tokens, cache, active):
+    return transformer.decode_step_paged(cfg, params, tokens, cache,
+                                         active=active)
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted(cfg: ModelConfig, kind: str):
     if kind == "decode":
-        return jax.jit(functools.partial(transformer.decode_step, cfg))
+        return jax.jit(functools.partial(_decode_dense_fn, cfg))
     if kind == "decode_paged":
-        return jax.jit(functools.partial(transformer.decode_step_paged, cfg),
+        return jax.jit(functools.partial(_decode_paged_fn, cfg),
                        donate_argnums=(2,))
     if kind == "prefill":
         return jax.jit(functools.partial(_prefill_dense_fn, cfg))
     if kind == "prefill_paged":
         return jax.jit(functools.partial(transformer.prefill_paged, cfg),
                        donate_argnums=(2,))
+    if kind == "fork":
+        return jax.jit(functools.partial(transformer.fork_slot_paged, cfg),
+                       donate_argnums=(0,))
     if kind == "insert":
         return jax.jit(_insert_fn, donate_argnums=(0,))
     if kind == "score":
@@ -108,16 +120,27 @@ class Slot:
     ctx_len: int = 0        # tokens currently in the KV cache for this slot
     arrival: int = 0        # admission order (eviction picks the youngest)
     evicted: bool = False   # preempted: requeue instead of completing
+    parked: bool = False    # holds a shared prefix for forking, not decoding
+    # suffix tokens still to be teacher-forced into the cache (fork path):
+    # each decode step feeds pending[0] instead of the last sampled token
+    pending: List[int] = dataclasses.field(default_factory=list)
+    fork_src: int = -1      # parked slot this one was forked from (-1: none)
+    suffix: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
 class _Resume:
-    """A preempted request: resubmitted with its generated prefix carried."""
+    """A queued request: fresh, or preempted with its generated prefix
+    carried. share_from >= 0 routes admission through the COW fork path
+    (prompt then holds the full prefix+suffix fallback for eviction resume).
+    """
     req_id: int
     prompt: List[int]
     max_new: int
     carry_tokens: List[int]
     carry_lps: List[float]
+    share_from: int = -1
+    suffix: List[int] = dataclasses.field(default_factory=list)
 
 
 class InferenceEngine:
@@ -127,7 +150,7 @@ class InferenceEngine:
                  max_len: int = 1024, sampler: SamplerConfig = SamplerConfig(),
                  eos_id: int = 0, name: str = "engine",
                  kv_backend: str = "dense", page_size: int = 32,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None, prefix_sharing: bool = True):
         assert kv_backend in ("dense", "paged"), kv_backend
         self.cfg = cfg
         self.params = params
@@ -137,6 +160,11 @@ class InferenceEngine:
         self.eos_id = eos_id
         self.name = name
         self.kv_backend = kv_backend
+        # escape hatch: prefix_sharing=False makes generate_fanout submit
+        # monolithically, restoring exact dense<->paged A/B at the pipeline
+        # level (the fork path's teacher-forced suffixes are a different —
+        # equally valid — float reduction order than one monolithic prefill)
+        self.prefix_sharing = prefix_sharing
         self.slots = [Slot() for _ in range(max_batch)]
         self.key = jax.random.PRNGKey(0)
         self.tokens_generated = 0
@@ -145,7 +173,10 @@ class InferenceEngine:
         self.evictions = 0
         self.peak_pages = 0
         self._window_peak = 0
+        self._window_shared = 0
+        self._window_logical = 0
         self._resume_queue: List[_Resume] = []
+        self._prefix_logits: Dict[int, jax.Array] = {}   # parked slot -> (1,V)
 
         if kv_backend == "paged":
             assert max_len % page_size == 0, "max_len must be page-aligned"
@@ -161,6 +192,7 @@ class InferenceEngine:
             self._push_table()
             self._decode = _jitted(cfg, "decode_paged")
             self._prefill_paged = _jitted(cfg, "prefill_paged")
+            self._fork = _jitted(cfg, "fork")
         else:
             self.cache = transformer.init_cache(cfg, max_batch, max_len)
             self._decode = _jitted(cfg, "decode")
@@ -174,21 +206,39 @@ class InferenceEngine:
     def _push_table(self):
         self.cache["block_table"] = jnp.asarray(self.block_table)
 
+    def _occupancy(self) -> Tuple[int, int, int]:
+        """(physical, shared, logical) occupancy right now. Dense slots are
+        counted as one "page" each with no sharing."""
+        if self.kv_backend == "paged":
+            return (self.alloc.pages_in_use, self.alloc.pages_shared,
+                    self.alloc.logical_pages)
+        used = sum(1 for s in self.slots if s.active)
+        return used, 0, used
+
     def _track_peak(self):
-        used = self.alloc.pages_in_use
+        used, shared, logical = self._occupancy()
         self.peak_pages = max(self.peak_pages, used)
         self._window_peak = max(self._window_peak, used)
+        self._window_shared = max(self._window_shared, shared)
+        self._window_logical = max(self._window_logical, logical)
 
-    def consume_peak(self) -> int:
-        """High-water page usage since the last call, then reset the window.
+    def consume_window(self) -> Dict[str, int]:
+        """High-water occupancy since the last call, then reset the window.
         The PICE pipeline is synchronous — pools drain to zero between
         requests — so instantaneous occupancy is always 0 at observation
-        time; the windowed peak is the pressure signal that survives."""
-        if self.kv_backend != "paged":
-            return sum(1 for s in self.slots if s.active)
-        peak = max(self._window_peak, self.alloc.pages_in_use)
-        self._window_peak = self.alloc.pages_in_use
-        return peak
+        time; the windowed peak is the pressure signal that survives. Both
+        backends window: a dense fleet otherwise always reports ~0 active
+        slots between synchronous requests."""
+        self._track_peak()
+        out = {"pages": self._window_peak, "shared": self._window_shared,
+               "logical": self._window_logical}
+        (self._window_peak, self._window_shared,
+         self._window_logical) = self._occupancy()
+        return out
+
+    def consume_peak(self) -> int:
+        """Windowed physical peak (see consume_window)."""
+        return self.consume_window()["pages"]
 
     def _release_slot_pages(self, slot: int):
         self.alloc.release(slot)
@@ -204,26 +254,44 @@ class InferenceEngine:
             return False
         v = max(victims, key=lambda i: self.slots[i].arrival)
         s = self.slots[v]
+        # release only frees the victim's *unique* pages (refcounted), never
+        # prefix pages its siblings still read. A fork whose prefix is still
+        # parked resumes through the fork path (replaying suffix + generated
+        # tokens through decode rebuilds bit-identical KV without a second
+        # prefix prefill); otherwise s.prompt holds the full prefix+suffix
+        # for a monolithic resume.
+        refork = (0 <= s.fork_src < self.max_batch
+                  and self.slots[s.fork_src].parked)
         self._resume_queue.append(_Resume(
             req_id=s.req_id, prompt=list(s.prompt),
             max_new=s.max_new, carry_tokens=list(s.tokens),
-            carry_lps=list(s.logprobs)))
+            carry_lps=list(s.logprobs),
+            share_from=s.fork_src if refork else -1,
+            suffix=list(s.suffix) if refork else []))
         self._release_slot_pages(v)
         s.active, s.evicted, s.req_id = False, True, -1
+        s.pending, s.fork_src, s.suffix = [], -1, []
         self.evictions += 1
         return True
 
     def memory_stats(self) -> Dict[str, float]:
-        """Engine-level KV memory telemetry (for RuntimeMonitor)."""
+        """Engine-level KV memory telemetry (for RuntimeMonitor).
+
+        `pages_shared` counts physical pages referenced by >1 slot;
+        `pages_logical` is the sum of per-slot chains (what an unshared
+        layout would hold) — logical - in_use is the COW saving."""
         if self.kv_backend == "paged":
             return {"backend": "paged", "pages_total": self.n_pages,
                     "pages_in_use": self.alloc.pages_in_use,
+                    "pages_shared": self.alloc.pages_shared,
+                    "pages_logical": self.alloc.logical_pages,
                     "peak_pages": self.peak_pages,
                     "utilization": self.alloc.utilization,
                     "evictions": self.evictions}
         used = sum(1 for s in self.slots if s.active)
         return {"backend": "dense", "pages_total": self.max_batch,
-                "pages_in_use": used, "peak_pages": self.max_batch,
+                "pages_in_use": used, "pages_shared": 0,
+                "pages_logical": used, "peak_pages": self.max_batch,
                 "utilization": used / self.max_batch, "evictions": 0}
 
     def can_admit(self, prompt_len: int) -> bool:
@@ -235,27 +303,28 @@ class InferenceEngine:
             return len(self.alloc.free) >= need
         return True
 
+    def can_admit_fork(self, src_slot: int, extra_tokens: int = 0) -> bool:
+        """Admission check for the fork path: a free batch row plus enough
+        free pages for the tail copy AND the suffix/carry replay
+        (extra_tokens). Gating on the full replay need — like `can_admit`
+        gates on the full prompt — prevents admit/evict livelock between
+        sibling forks under a tight pool."""
+        if not self.free_slots():
+            return False
+        src = self.slots[src_slot]
+        total = min(src.ctx_len + extra_tokens, self.max_len)
+        full_shared = src.ctx_len // self.page_size
+        need = -(-total // self.page_size) - full_shared
+        return len(self.alloc.free) >= need
+
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if not s.active]
+        return [i for i, s in enumerate(self.slots)
+                if not s.active and not s.parked]
 
-    def add_request(self, req_id: int, prompt: List[int], max_new: int,
-                    carry_tokens: Optional[List[int]] = None,
-                    carry_lps: Optional[List[float]] = None) -> int:
-        free = self.free_slots()
-        if not free:
-            raise RuntimeError("no free slot")
-        slot = free[0]
-        t0 = time.perf_counter()
-        carry_tokens = carry_tokens or []
-        carry_lps = carry_lps or []
-        full_prompt = list(prompt) + carry_tokens
-        S = _bucket(len(full_prompt))
-        S = min(S, self.max_len)
-        padded = np.zeros((1, S), np.int32)
-        toks = full_prompt[-S:]
-        padded[0, :len(toks)] = toks
-
+    def _prefill_into(self, slot: int, toks: List[int], padded: np.ndarray):
+        """Prefill `toks` into batch row `slot` (either backend); returns
+        last-token logits (1, V)."""
         if self.kv_backend == "paged":
             pages = self.alloc.alloc_for(slot, len(toks))   # MemoryError if dry
             self._track_peak()
@@ -272,21 +341,129 @@ class InferenceEngine:
                 self.params, jnp.asarray(padded), one_cache,
                 jnp.asarray([len(toks)], jnp.int32))
             self.cache = self._insert(self.cache, one_cache, slot)
+        return logits
+
+    @staticmethod
+    def _pad_prompt(full_prompt: List[int], max_len: int):
+        S = min(_bucket(len(full_prompt)), max_len)
+        padded = np.zeros((1, S), np.int32)
+        toks = full_prompt[-S:]
+        padded[0, :len(toks)] = toks
+        return toks, padded
+
+    # ------------------------------------------------------------------
+    # Prefix sharing (PICE sketch fan-out): prefill the shared (query,
+    # sketch) prefix ONCE into a parked slot, then fork N copy-on-write
+    # block-table rows off it — full prefix pages are shared refcounted,
+    # only the partial tail page is copied per fork.
+    # ------------------------------------------------------------------
+    def prefill_prefix(self, prefix: List[int]) -> int:
+        """Prefill a shared prefix into a parked slot and return its id for
+        `add_request(..., share_from=slot)`. The slot holds its pages (and
+        is excluded from scheduling) until `release_prefix`."""
+        assert self.kv_backend == "paged", \
+            "prefix sharing needs the paged backend"
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slot")
+        # park in the LAST free slot: forks then land on the same batch rows
+        # as independent submissions would, keeping the per-row PRNG draws —
+        # and therefore sampled outputs — bit-identical to the unshared path
+        slot = free[-1]
+        t0 = time.perf_counter()
+        toks, padded = self._pad_prompt(list(prefix), self.max_len)
+        logits = self._prefill_into(slot, toks, padded)
+        s = self.slots[slot]
+        s.req_id, s.active, s.parked = -1, False, True
+        s.prompt = list(prefix)
+        s.tokens, s.logprobs, s.pending = [], [], []
+        s.ctx_len = len(toks)
+        self._prefix_logits[slot] = logits
+        self.busy_s += time.perf_counter() - t0
+        return slot
+
+    def release_prefix(self, slot: int) -> None:
+        """Free a parked prefix slot; pages shared with live forks survive
+        via their refcounts."""
+        s = self.slots[slot]
+        assert s.parked, "release_prefix on a non-parked slot"
+        s.parked = False
+        self._prefix_logits.pop(slot, None)
+        self._release_slot_pages(slot)
+
+    def add_request(self, req_id: int, prompt: List[int], max_new: int,
+                    carry_tokens: Optional[List[int]] = None,
+                    carry_lps: Optional[List[float]] = None,
+                    share_from: Optional[int] = None,
+                    suffix: Optional[List[int]] = None) -> int:
+        """Admit a request. share_from forks a parked prefix slot
+        copy-on-write instead of prefilling; `suffix` tokens (the part of
+        the logical prompt beyond the shared prefix) are then teacher-forced
+        through the decode path before sampling starts — as are any carried
+        tokens when a preempted fork resumes. `prompt` must be the full
+        logical prompt (prefix + suffix) so eviction can always fall back to
+        a monolithic resume."""
+        suffix = list(suffix or [])
+        carry_tokens = carry_tokens or []
+        carry_lps = carry_lps or []
+        if share_from is not None:
+            src = self.slots[share_from]
+            assert self.kv_backend == "paged", \
+                "prefix sharing needs the paged backend"
+            assert src.parked and share_from in self._prefix_logits, \
+                "share_from must be a parked prefill_prefix slot"
+            if src.ctx_len + len(suffix) + len(carry_tokens) > self.max_len:
+                share_from = None       # would overflow: prefill monolithically
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slot")
+        slot = free[0]
+        t0 = time.perf_counter()
+
+        if share_from is not None:
+            src = self.slots[share_from]
+            # MemoryError if the tail copy cannot be allocated
+            dst_pages, tail_src, tail_dst = self.alloc.fork(
+                share_from, slot, src.ctx_len)
+            self._track_peak()
+            self.block_table[slot, :] = -1
+            self.block_table[slot, :len(dst_pages)] = dst_pages
+            self._push_table()
+            self.cache = self._fork(
+                self.cache, jnp.asarray(share_from, jnp.int32),
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(tail_src, jnp.int32),
+                jnp.asarray(tail_dst, jnp.int32))
+            logits = self._prefix_logits[share_from]
+            ctx = src.ctx_len
+            pending = suffix + carry_tokens
+        else:
+            toks, padded = self._pad_prompt(list(prompt) + carry_tokens,
+                                            self.max_len)
+            logits = self._prefill_into(slot, toks, padded)
+            ctx = len(toks)
+            pending = []
 
         s = self.slots[slot]
         s.req_id, s.active = req_id, True
         s.prompt = list(prompt)
         s.tokens, s.logprobs = list(carry_tokens), list(carry_lps)
         s.max_new, s.generated = max_new, len(carry_tokens)
-        s.ctx_len = len(toks)
+        s.ctx_len = ctx
+        s.pending = list(pending)
+        s.fork_src = share_from if share_from is not None else -1
+        s.suffix = suffix if share_from is not None else []
         s.evicted = False
         s.arrival = self._arrivals
         self._arrivals += 1
-        # sample the first token from prefill logits
-        self.key, sub = jax.random.split(self.key)
-        tok = sample(logits, sub, self.sampler)
-        lp = token_logprob(logits, tok)
-        self._commit(slot, int(tok[0]), float(lp[0]))
+        self._track_peak()
+        if not s.pending:
+            # sample the first token from (possibly shared) prefill logits
+            self.key, sub = jax.random.split(self.key)
+            tok = sample(logits, sub, self.sampler)
+            lp = token_logprob(logits, tok)
+            self._commit(slot, int(tok[0]), float(lp[0]))
+        # else: the first sample comes after the last suffix token is fed
         self.busy_s += time.perf_counter() - t0
         return slot
 
@@ -306,20 +483,36 @@ class InferenceEngine:
                 self._release_slot_pages(slot)
 
     def _grow_pages(self):
-        """Before a decode step, map a page for every active slot about to
-        cross a page boundary; evict the youngest request when the pool is
-        dry. Raises MemoryError only if a lone request cannot grow."""
+        """Before a decode step, make every active slot's next write target
+        safe: copy-on-write any shared page the write would land in, and map
+        a fresh page when the slot crosses a page boundary; evict the
+        youngest request when the pool is dry. Raises MemoryError only if a
+        lone request cannot grow."""
         changed = False
         for i, s in enumerate(self.slots):
             if not s.active or s.ctx_len >= self.max_len:
                 continue
+            cow, cow_done = None, False
             while True:
                 try:
+                    if not cow_done:
+                        cow = self.alloc.cow_page(i, s.ctx_len)
+                        cow_done = True
                     newp = self.alloc.extend(i, s.ctx_len + 1)
                     break
                 except MemoryError:
                     if not self._evict_youngest(protect=i):
                         raise
+            if cow is not None:
+                old, new = cow
+                self.block_table[i, s.ctx_len // self.page_size] = new
+                # device-side page copy: fork op with src == dst slot
+                self.cache = self._fork(
+                    self.cache, jnp.asarray(i, jnp.int32),
+                    jnp.asarray(i, jnp.int32), jnp.asarray(old, jnp.int32),
+                    jnp.asarray(new, jnp.int32))
+                changed = True
+                self._track_peak()
             if newp is not None:
                 n_owned = len(self.alloc.owned[i])
                 self.block_table[i, n_owned - 1] = newp
@@ -329,7 +522,12 @@ class InferenceEngine:
             self._push_table()
 
     def step(self) -> bool:
-        """One decode step for all active slots. Returns True if work done."""
+        """One decode step for all active slots. Returns True if work done.
+
+        Slots with a pending suffix (fork path) are teacher-forced: the step
+        feeds `pending[0]` instead of the last sampled token and the sampled
+        output is discarded until the suffix is exhausted — the logits after
+        the final suffix token seed the first real sample."""
         active = [i for i, s in enumerate(self.slots) if s.active]
         if not active:
             return False
@@ -340,16 +538,26 @@ class InferenceEngine:
             if not active:
                 return False
         last = np.zeros((self.max_batch, 1), np.int32)
-        for i, s in enumerate(self.slots):
-            last[i, 0] = s.tokens[-1] if s.tokens else 0
+        mask = np.zeros((self.max_batch,), bool)
+        mask[active] = True
+        for i in active:
+            s = self.slots[i]
+            if s.pending:
+                last[i, 0] = s.pending[0]
+            elif s.tokens:
+                last[i, 0] = s.tokens[-1]
         logits, self.cache = self._decode(self.params, jnp.asarray(last),
-                                          self.cache)
+                                          self.cache, jnp.asarray(mask))
         self.key, sub = jax.random.split(self.key)
         toks = np.asarray(sample(logits, sub, self.sampler))
         lps = np.asarray(token_logprob(logits, jnp.asarray(toks)))
         for i in active:
-            self.slots[i].ctx_len = min(self.slots[i].ctx_len + 1,
-                                        self.max_len)
+            s = self.slots[i]
+            s.ctx_len = min(s.ctx_len + 1, self.max_len)
+            if s.pending:
+                s.pending.pop(0)
+                if s.pending:
+                    continue            # still teacher-forcing the suffix
             self._commit(i, int(toks[i]), float(lps[i]))
         self.busy_s += time.perf_counter() - t0
         return True
@@ -358,24 +566,61 @@ class InferenceEngine:
     def generate(self, prompts: List[List[int]], max_new: int = 128
                  ) -> List[Tuple[List[int], List[float]]]:
         """Batch-generate; returns (tokens, logprobs) per prompt."""
+        pending = [_Resume(req_id=i, prompt=p, max_new=max_new,
+                           carry_tokens=[], carry_lps=[])
+                   for i, p in enumerate(prompts)]
+        return self._run(pending)
+
+    def generate_fanout(self, prefix: List[int],
+                        suffixes: List[List[int]], max_new: int = 128
+                        ) -> List[Tuple[List[int], List[float]]]:
+        """Expand one shared prefix N ways (the PICE sketch fan-out: every
+        ensemble member / parallel expansion segment repeats the same
+        (query, sketch) prefix). The prefix is prefilled ONCE and each
+        expansion forks a copy-on-write block-table row off it, so the pool
+        holds one prefix instead of N; per-group suffixes are teacher-forced
+        before sampling. Falls back to independent submissions on the dense
+        backend, a 1-slot engine, or prefix_sharing=False."""
+        if (self.kv_backend != "paged" or self.max_batch < 2
+                or not self.prefix_sharing):
+            return self.generate([list(prefix) + list(s) for s in suffixes],
+                                 max_new=max_new)
+        p_slot = self.prefill_prefix(prefix)
+        pending = [_Resume(req_id=i, prompt=list(prefix) + list(sfx),
+                           max_new=max_new, carry_tokens=[], carry_lps=[],
+                           share_from=p_slot, suffix=list(sfx))
+                   for i, sfx in enumerate(suffixes)]
+        try:
+            return self._run(pending)
+        finally:
+            self.release_prefix(p_slot)
+
+    def _run(self, pending: List[_Resume]
+             ) -> List[Tuple[List[int], List[float]]]:
+        n = len(pending)
         results: Dict[int, Tuple[List[int], List[float]]] = {}
-        pending: List[_Resume] = [
-            _Resume(req_id=i, prompt=p, max_new=max_new,
-                    carry_tokens=[], carry_lps=[])
-            for i, p in enumerate(prompts)]
         submitted: Dict[int, int] = {}          # req_id -> slot
         while pending or any(s.active for s in self.slots):
             while pending and self.free_slots():
                 r = pending[0]
-                if not self.can_admit(len(r.prompt) + len(r.carry_tokens)):
+                if r.share_from >= 0 and not self.slots[r.share_from].parked:
+                    r.share_from, r.suffix = -1, []   # prefix gone: monolithic
+                if r.share_from >= 0:
+                    ok = self.can_admit_fork(
+                        r.share_from, len(r.suffix) + len(r.carry_tokens))
+                else:
+                    ok = self.can_admit(len(r.prompt) + len(r.carry_tokens))
+                if not ok:
                     if not any(s.active for s in self.slots):
                         raise MemoryError(
                             f"request {r.req_id} cannot fit in the page pool")
                     break                        # wait for pages to free
                 pending.pop(0)
-                slot = self.add_request(r.req_id, r.prompt, r.max_new,
-                                        carry_tokens=r.carry_tokens,
-                                        carry_lps=r.carry_lps)
+                slot = self.add_request(
+                    r.req_id, r.prompt, r.max_new,
+                    carry_tokens=r.carry_tokens, carry_lps=r.carry_lps,
+                    share_from=r.share_from if r.share_from >= 0 else None,
+                    suffix=r.suffix)
                 submitted[r.req_id] = slot
             self.step()
             done = [rid for rid, sl in submitted.items()
@@ -393,7 +638,7 @@ class InferenceEngine:
                 # (victims were queued youngest-first as eviction found them)
                 pending[:0] = reversed(self._resume_queue)
                 self._resume_queue.clear()
-        return [results[i] for i in range(len(prompts))]
+        return [results[i] for i in range(n)]
 
     def score(self, tokens: List[int]) -> Tuple[float, np.ndarray]:
         """Mean token logprob of a sequence under this model (perplexity)."""

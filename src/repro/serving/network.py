@@ -25,4 +25,7 @@ class NetworkModel:
         base = self.rtt_s + bytes_ * 8 / (self.bandwidth_mbps * 1e6)
         if self.jitter_frac:
             base *= 1.0 + self._rng.uniform(-self.jitter_frac, self.jitter_frac)
+            # jitter models queueing variance on top of physics: a draw with
+            # jitter_frac >= 1 must not undercut (or negate) the light-path RTT
+            base = max(base, self.rtt_s)
         return base

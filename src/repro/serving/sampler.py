@@ -21,7 +21,10 @@ def sample(logits: jax.Array, key: jax.Array, cfg: SamplerConfig) -> jax.Array:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / cfg.temperature
     if cfg.top_k:
-        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        # clamp: top_k >= vocab means no truncation (and sorted[:, -k] would
+        # index out of bounds)
+        k = min(cfg.top_k, logits.shape[-1])
+        kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     if cfg.top_p < 1.0:
         sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]

@@ -71,6 +71,61 @@ def test_scheduler_queue_backpressure():
     assert d0.mode == "progressive"
 
 
+def test_expand_prompt_splits_additively():
+    """The fork path prefills edge_expand_prefix once and teacher-forces
+    edge_expand_suffix per group: their concatenation must stay exactly the
+    monolithic template (byte-level tokenizer makes encode additive)."""
+    from repro.core import sketch as sketch_lib
+    from repro.data import tokenizer as tok
+    q, s, g = "why is the sky blue", "rayleigh. scattering", ["rayleigh", "blue"]
+    prefix = sketch_lib.edge_expand_prefix(q, s)
+    suffix = sketch_lib.edge_expand_suffix(g)
+    assert prefix + suffix == sketch_lib.edge_expand_prompt(q, s, g)
+    assert tok.encode(prefix) + tok.encode(suffix) == \
+        tok.encode(prefix + suffix)
+
+
+def test_memory_pressure_reflects_cow_sharing():
+    """Physical occupancy drives Eq.(2)'s 1/(1-rho) inflation: the same
+    logical demand served through COW prefix sharing must read as LESS
+    pressure, while mostly-shared (hard-to-evict) occupancy reads as more
+    pressure than all-unique occupancy at equal utilization."""
+    mon = RuntimeMonitor()
+    sched = _sched()
+    sched.monitor = mon
+    mon.update_memory(pages_used=90, pages_total=100, pages_logical=90)
+    f_unshared = sched.memory_pressure_factor()
+    # the same 90 logical pages, fanned out over shared prefixes
+    mon.update_memory(pages_used=30, pages_total=100, pages_shared=20,
+                      pages_logical=90)
+    f_shared = sched.memory_pressure_factor()
+    assert f_shared < f_unshared
+    assert mon.kv_sharing_savings == pytest.approx(1.0 - 30 / 90)
+    assert mon.kv_shared_fraction == pytest.approx(20 / 30)
+    # equal utilization, but pinned (shared) pages shrink evictable headroom
+    mon.update_memory(pages_used=60, pages_total=100, pages_shared=60,
+                      pages_logical=120)
+    f_pinned = sched.memory_pressure_factor()
+    mon.update_memory(pages_used=60, pages_total=100, pages_logical=60)
+    f_free = sched.memory_pressure_factor()
+    assert f_pinned > f_free
+    # no telemetry -> factor 1.0 (seed behavior)
+    mon.update_memory(pages_used=0, pages_total=0)
+    assert sched.memory_pressure_factor() == pytest.approx(1.0)
+
+
+def test_network_jitter_never_undercuts_rtt():
+    """jitter_frac >= 1 could return a delay below rtt_s (even negative)."""
+    net = NetworkModel(jitter_frac=1.5)
+    delays = [net.delay_s(200) for _ in range(300)]
+    assert all(d >= net.rtt_s for d in delays)
+    # jitter still actually varies the delay upward
+    assert max(delays) > min(delays)
+    # jitter-free path unchanged
+    calm = NetworkModel()
+    assert calm.delay_s(0) == pytest.approx(calm.rtt_s)
+
+
 def test_lexicographic_order_respected():
     a = ScheduleDecision(mode="progressive",
                          metrics={"error": 0.1, "latency": 10.0})

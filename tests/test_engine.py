@@ -187,6 +187,152 @@ def test_memory_stats_shape(params):
         assert st["pages_in_use"] == 0
 
 
+# ---------------------------------------------------------------------------
+# copy-on-write prefix sharing (ensemble fan-out)
+# ---------------------------------------------------------------------------
+
+FANOUT_PROMPT = [(i % 100) + 1 for i in range(70)]   # 5 pages at page 16
+
+
+def test_fanout_bit_identical_to_independent_and_under_06x_peak(params):
+    """N-way fan-out from one prefix must produce exactly the tokens and
+    logprobs of N independent paged submissions while holding the prefix
+    once: peak page usage < 0.6x the unshared peak (prefix >= 4 pages)."""
+    N = 4
+    unshared = _engine(params, max_batch=N + 1, kv_backend="paged",
+                       page_size=16)
+    shared = _engine(params, max_batch=N + 1, kv_backend="paged",
+                     page_size=16)
+    ou = unshared.generate([FANOUT_PROMPT] * N, max_new=8)
+    os_ = shared.generate_fanout(FANOUT_PROMPT, [[] for _ in range(N)],
+                                 max_new=8)
+    for i, ((tu, lu), (ts, ls)) in enumerate(zip(ou, os_)):
+        assert tu == ts, f"fork {i}: tokens diverge"
+        np.testing.assert_array_equal(np.asarray(lu), np.asarray(ls),
+                                      err_msg=f"fork {i}: logprobs diverge")
+    peak_u = unshared.memory_stats()["peak_pages"]
+    peak_s = shared.memory_stats()["peak_pages"]
+    assert len(FANOUT_PROMPT) >= 4 * 16            # prefix >= 4 pages
+    assert peak_s < 0.6 * peak_u, (peak_s, peak_u)
+    # full drain: every refcount back to zero, no page leaked or double-freed
+    assert shared.alloc.pages_in_use == 0
+    assert all(c == 0 for c in shared.alloc.refcount)
+    assert sorted(shared.alloc.free) == list(range(shared.n_pages))
+
+
+def test_fanout_sampled_bit_identical(params):
+    """Stochastic sampling: same max_batch + same PRNG stream -> the fan-out
+    draws exactly what independent submissions would (the prefix parks in
+    the LAST slot so forks land on the same batch rows)."""
+    sampler = SamplerConfig(temperature=0.8, top_k=16)
+    N = 3
+    ou = _engine(params, max_batch=N + 1, kv_backend="paged", page_size=16,
+                 sampler=sampler).generate([FANOUT_PROMPT] * N, max_new=8)
+    os_ = _engine(params, max_batch=N + 1, kv_backend="paged", page_size=16,
+                  sampler=sampler).generate_fanout(
+        FANOUT_PROMPT, [[] for _ in range(N)], max_new=8)
+    assert ou == os_
+    # distinct forks actually diverge (they are independent samples)
+    assert len({tuple(t) for t, _ in os_}) > 1
+
+
+def test_fanout_suffixes_and_sharing_telemetry(params):
+    """Per-group suffixes are teacher-forced on top of the shared prefix;
+    the monitor's windowed telemetry must see the sharing."""
+    from repro.core.profiler import RuntimeMonitor
+    eng = _engine(params, max_batch=4, kv_backend="paged", page_size=16)
+    outs = eng.generate_fanout(FANOUT_PROMPT, [[5, 6, 7], [9], [11, 12]],
+                               max_new=6)
+    assert len(outs) == 3
+    for toks, lps in outs:
+        assert 1 <= len(toks) <= 6 and len(lps) == len(toks)
+    assert eng.alloc.pages_in_use == 0
+    mon = RuntimeMonitor()
+    mon.observe_engines([eng])
+    assert mon.kv_pages_shared > 0
+    assert mon.kv_pages_logical > mon.kv_pages_used
+    assert mon.kv_sharing_savings > 0.0
+    assert 0.0 < mon.kv_shared_fraction <= 1.0
+
+
+def test_evicting_a_fork_never_frees_sibling_pages(params):
+    """A pool too small for the whole fan-out preempts forks; refcounted
+    release must leave sibling (and prefix) pages intact, and the resumed
+    forks must still produce the unconstrained results (greedy)."""
+    N = 3
+    big = _engine(params, max_batch=N + 1, kv_backend="paged", page_size=8)
+    ref = big.generate([FANOUT_PROMPT] * N, max_new=12)
+    small = _engine(params, max_batch=N + 1, kv_backend="paged", page_size=8,
+                    n_pages=12)
+    out = small.generate_fanout(FANOUT_PROMPT, [[] for _ in range(N)],
+                                max_new=12)
+    assert small.evictions > 0, "a 12-page pool must preempt"
+    for a, b in zip(ref, out):
+        assert a == b
+    assert small.alloc.pages_in_use == 0
+    assert all(c == 0 for c in small.alloc.refcount)
+    assert sorted(small.alloc.free) == list(range(small.n_pages))
+
+
+def test_fanout_dense_backend_falls_back(params):
+    a = _engine(params).generate_fanout([1, 2, 3], [[4], [5]], max_new=4)
+    b = _engine(params).generate([[1, 2, 3, 4], [1, 2, 3, 5]], max_new=4)
+    assert a == b
+
+
+def test_prefix_sharing_opt_out_is_monolithic(params):
+    """prefix_sharing=False restores exact monolithic submissions (the
+    pipeline-level dense<->paged A/B escape hatch)."""
+    a = _engine(params, kv_backend="paged", page_size=16,
+                prefix_sharing=False).generate_fanout(
+        FANOUT_PROMPT, [[1], [2]], max_new=4)
+    b = _engine(params, kv_backend="paged", page_size=16).generate(
+        [FANOUT_PROMPT + [1], FANOUT_PROMPT + [2]], max_new=4)
+    assert a == b
+
+
+def test_release_prefix_frees_parked_pages(params):
+    eng = _engine(params, kv_backend="paged", page_size=16)
+    slot = eng.prefill_prefix(FANOUT_PROMPT)
+    assert eng.slots[slot].parked
+    assert slot not in eng.free_slots()
+    assert eng.alloc.pages_in_use == 5
+    eng.release_prefix(slot)
+    assert eng.alloc.pages_in_use == 0
+    assert slot in eng.free_slots()
+
+
+# ---------------------------------------------------------------------------
+# serving-layer bug sweep
+# ---------------------------------------------------------------------------
+
+def test_dense_consume_peak_is_windowed(params):
+    """Dense fleets drain to zero active slots between synchronous requests;
+    consume_peak must report the window's high-water mark, not ~0."""
+    eng = _engine(params)                          # dense, max_batch 3
+    eng.generate([[1, 2, 3], [4, 5], [6]], max_new=4)
+    assert sum(1 for s in eng.slots if s.active) == 0      # drained
+    assert eng.consume_peak() == 3
+    assert eng.consume_peak() == 0                 # window reset
+
+
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_inactive_slot_lengths_do_not_drift(params, backend):
+    """Freed slots must stop advancing their cache lengths: before the fix
+    they drifted past max_len and kept issuing clipped writes."""
+    kw = {"kv_backend": "paged", "page_size": 16} if backend == "paged" else {}
+    eng = _engine(params, max_batch=2, max_len=64, **kw)
+    s1 = eng.add_request(1, [8, 9, 10], max_new=40)        # long-running
+    s0 = eng.add_request(0, [5, 6, 7], max_new=1)          # done immediately
+    assert s0 != s1 and not eng.slots[s0].active
+    frozen = eng.slots[s0].ctx_len
+    while eng.slots[s1].active:
+        eng.step()
+    lens = np.asarray(eng.cache["lengths"])
+    assert lens[s0] == frozen, "inactive slot length drifted"
+    assert lens[s1] <= eng.max_len
+
+
 def test_monitor_sees_windowed_peak_after_drain(params):
     """The pipeline observes engines between (synchronous) requests, when
     pools have drained to zero — the monitor must still see the high-water

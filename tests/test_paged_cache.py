@@ -125,6 +125,66 @@ def test_write_token_unmapped_row_is_dropped():
     np.testing.assert_allclose(np.asarray(pv), np.ones((4, page, kv, hd)))
 
 
+def test_allocator_fork_shares_full_pages_and_copies_tail():
+    alloc = pc.PageAllocator(n_pages=16, page_size=4, max_pages_per_seq=8)
+    src = alloc.alloc_for(0, 10)                   # 2 full pages + tail
+    dst, tail_src, tail_dst = alloc.fork(0, 1, n_tokens=10)
+    assert dst[:2] == src[:2]                      # full pages shared
+    assert tail_src == src[2] and tail_dst == dst[2] and tail_dst != tail_src
+    assert [alloc.refcount[p] for p in src] == [2, 2, 1]
+    assert alloc.refcount[tail_dst] == 1
+    assert alloc.pages_shared == 2
+    assert alloc.logical_pages == 6                # 3 + 3 chains
+    assert alloc.pages_in_use == 4                 # 3 + 1 physical
+    assert alloc.unique_pages(0) == 1 and alloc.unique_pages(1) == 1
+    # releasing the fork must not free pages the source still references
+    alloc.release(1)
+    assert all(alloc.refcount[p] == 1 for p in src)
+    assert alloc.pages_in_use == 3
+    alloc.release(0)
+    assert alloc.pages_in_use == 0
+    assert sorted(alloc.free) == list(range(16))
+    assert all(c == 0 for c in alloc.refcount)
+
+
+def test_allocator_fork_aligned_prefix_needs_no_copy():
+    alloc = pc.PageAllocator(n_pages=8, page_size=4, max_pages_per_seq=4)
+    src = alloc.alloc_for(0, 8)                    # exactly 2 full pages
+    dst, tail_src, tail_dst = alloc.fork(0, 1, n_tokens=8)
+    assert dst == src and tail_src == tail_dst     # pure sharing
+    assert alloc.pages_in_use == 2
+    assert alloc.fork_cost(8) == 0 and alloc.fork_cost(9) == 1
+
+
+def test_allocator_cow_page_unshares_before_write():
+    alloc = pc.PageAllocator(n_pages=8, page_size=4, max_pages_per_seq=4)
+    src = alloc.alloc_for(0, 8)
+    alloc.fork(0, 1, n_tokens=8)                   # both pages shared
+    cow = alloc.cow_page(1, pos=4)                 # page idx 1
+    assert cow is not None
+    old, new = cow
+    assert old == src[1] and alloc.owned[1][1] == new
+    assert alloc.refcount[old] == 1 and alloc.refcount[new] == 1
+    assert alloc.cow_page(1, pos=4) is None        # already private
+    assert alloc.cow_page(0, pos=7) is None        # src side now unique too
+    alloc.release(0)
+    alloc.release(1)
+    assert alloc.pages_in_use == 0
+    assert sorted(alloc.free) == list(range(8))
+
+
+def test_copy_page_device_op():
+    pages = jnp.arange(2 * 4 * 3 * 1 * 2, dtype=jnp.float32
+                       ).reshape(2, 4, 3, 1, 2)
+    out = pc.copy_page(pages, 1, 3)
+    np.testing.assert_allclose(np.asarray(out[:, 3]), np.asarray(pages[:, 1]))
+    np.testing.assert_allclose(np.asarray(out[:, :3]),
+                               np.asarray(pages[:, :3]))
+    # src == dst must be a no-op (used when a fork has no partial tail)
+    np.testing.assert_allclose(np.asarray(pc.copy_page(pages, 2, 2)),
+                               np.asarray(pages))
+
+
 def test_allocator_extend_and_exhaustion():
     alloc = pc.PageAllocator(n_pages=4, page_size=4, max_pages_per_seq=4)
     alloc.alloc_for(0, 4)                  # 1 page

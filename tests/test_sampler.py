@@ -1,0 +1,117 @@
+"""Sampler properties: greedy / top-k / top-p (hypothesis when available,
+fixed examples otherwise, per the PR 1 convention)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.serving.sampler import SamplerConfig, sample, token_logprob
+
+V = 11
+
+
+def _logits(seed: int, B: int = 3, vocab: int = V) -> jax.Array:
+    return jax.random.normal(jax.random.PRNGKey(seed), (B, vocab)) * 3.0
+
+
+def test_greedy_is_argmax():
+    logits = _logits(0)
+    toks = sample(logits, jax.random.PRNGKey(1), SamplerConfig())
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+def test_top_k_ge_vocab_does_not_crash():
+    """top_k >= vocab used to index sorted[:, -top_k] out of bounds; it must
+    behave as plain temperature sampling."""
+    logits = _logits(2)
+    for k in (V, V + 1, 1000):
+        cfg = SamplerConfig(temperature=1.0, top_k=k)
+        toks = np.asarray(sample(logits, jax.random.PRNGKey(3), cfg))
+        assert ((0 <= toks) & (toks < V)).all()
+    # and it equals the untruncated distribution draw under the same key
+    full = sample(logits, jax.random.PRNGKey(3),
+                  SamplerConfig(temperature=1.0))
+    capped = sample(logits, jax.random.PRNGKey(3),
+                    SamplerConfig(temperature=1.0, top_k=1000))
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(capped))
+
+
+def test_top_k_one_is_greedy():
+    logits = _logits(4)
+    cfg = SamplerConfig(temperature=1.0, top_k=1)
+    toks = sample(logits, jax.random.PRNGKey(5), cfg)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+def test_tiny_top_p_is_greedy():
+    logits = _logits(6)
+    cfg = SamplerConfig(temperature=1.0, top_p=1e-6)
+    toks = sample(logits, jax.random.PRNGKey(7), cfg)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+def test_token_logprob_is_log_softmax_entry():
+    logits = _logits(8)
+    toks = jnp.asarray([0, 4, V - 1], jnp.int32)
+    lps = np.asarray(token_logprob(logits, toks))
+    ref = np.asarray(jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1))
+    np.testing.assert_allclose(lps, ref[np.arange(3), np.asarray(toks)],
+                               rtol=1e-6)
+    assert (lps <= 0.0).all()
+
+
+def _check_topk_support(k: int, seed: int):
+    """Sampled tokens must come from the top-k set (ties included)."""
+    logits = _logits(seed)
+    cfg = SamplerConfig(temperature=0.7, top_k=k)
+    toks = np.asarray(sample(logits, jax.random.PRNGKey(seed + 1), cfg))
+    arr = np.asarray(logits)
+    kth = np.sort(arr, axis=-1)[:, -min(k, V)]
+    for b, t in enumerate(toks):
+        assert arr[b, t] >= kth[b]
+
+
+def _check_topp_support(p: float, seed: int):
+    """Sampled tokens must survive the nucleus cutoff."""
+    logits = np.asarray(_logits(seed))
+    cfg = SamplerConfig(temperature=1.0, top_p=p)
+    toks = np.asarray(sample(jnp.asarray(logits), jax.random.PRNGKey(seed),
+                             cfg))
+    for b, t in enumerate(toks):
+        srt = np.sort(logits[b])[::-1]
+        probs = np.exp(srt - srt.max())
+        probs /= probs.sum()
+        cutoff = srt[min(int((np.cumsum(probs) < p).sum()), V - 1)]
+        assert logits[b, t] >= cutoff
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(min_value=1, max_value=2 * V),
+           st.integers(min_value=0, max_value=50))
+    @settings(max_examples=25, deadline=None)
+    def test_topk_support(k, seed):
+        _check_topk_support(k, seed)
+
+    @given(st.floats(min_value=0.05, max_value=0.999),
+           st.integers(min_value=0, max_value=50))
+    @settings(max_examples=25, deadline=None)
+    def test_topp_support(p, seed):
+        _check_topp_support(p, seed)
+else:
+    @pytest.mark.parametrize("k,seed", [(1, 0), (3, 7), (V, 11), (2 * V, 13)])
+    def test_topk_support(k, seed):
+        _check_topk_support(k, seed)
+
+    @pytest.mark.parametrize("p,seed", [(0.1, 0), (0.5, 7), (0.9, 11),
+                                        (0.999, 13)])
+    def test_topp_support(p, seed):
+        _check_topp_support(p, seed)
