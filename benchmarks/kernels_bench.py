@@ -3,13 +3,103 @@
 NOTE: interpret-mode wall time on CPU says nothing about TPU performance —
 the derived column carries the structural numbers that matter (FLOPs, bytes,
 arithmetic intensity); wall time is reported only to satisfy the CSV
-contract and catch pathological regressions."""
+contract and catch pathological regressions.
+
+  PYTHONPATH=src python -m benchmarks.kernels_bench [--paged-smoke]
+
+--paged-smoke runs only the paged decode A/B at tiny sizes (CI: parity +
+the per-step KV read-volume accounting must not regress)."""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, timed
+
+
+def paged_decode_case(smoke: bool = False):
+    """Paged decode read path A/B: Pallas block-table streaming kernel vs
+    the gather oracle (full table width) vs the live-trimmed gather the
+    engine's fallback now uses.
+
+    Lengths are skewed (one near-max straggler, short rest), which is where
+    the gather pays for `max_pages_per_seq` on every slot: its per-step KV
+    read volume is O(B * max_pages * page), the kernel's is O(sum
+    ceil(len/page) * page). The emitted kv_bytes column carries exactly
+    that accounting."""
+    from repro.kernels.paged_decode_attention import ops as pda
+    from repro.kernels.paged_decode_attention import ref as pda_ref
+
+    key = jax.random.PRNGKey(3)
+    if smoke:
+        B, Hq, Hkv, hd, page, P = 4, 8, 2, 32, 8, 8
+    else:
+        B, Hq, Hkv, hd, page, P = 8, 8, 2, 64, 32, 64
+    n_pages = B * P
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, hd), jnp.float32)
+    pages_k = jax.random.normal(ks[1], (n_pages, page, Hkv, hd), jnp.float32)
+    pages_v = jax.random.normal(ks[2], (n_pages, page, Hkv, hd), jnp.float32)
+    # length-skewed batch: one straggler at half the table width, the rest
+    # short — so all three read strategies differ: the trim drops the
+    # columns NO slot uses, the kernel additionally skips per-row dead width
+    max_tok = P * page
+    lens_np = np.full((B,), max(page // 2, 1), np.int64)
+    lens_np[0] = max_tok // 2 - page // 2
+    lens = jnp.asarray(lens_np, jnp.int32)
+    table_np = np.full((B, P), -1, np.int64)
+    nxt = 0
+    for b in range(B):
+        live = -(-int(lens_np[b]) // page)
+        table_np[b, :live] = np.arange(nxt, nxt + live)
+        nxt += live
+    table = jnp.asarray(table_np, jnp.int32)
+    live_w = max(1, -(-int(lens_np.max()) // page))
+
+    tok_bytes = 2 * Hkv * hd * 4                      # K+V, f32
+    bytes_gather = B * P * page * tok_bytes           # full table width
+    bytes_trim = B * live_w * page * tok_bytes        # live-trimmed gather
+    pages_live = sum(-(-int(l) // page) for l in lens_np)
+    bytes_kernel = pages_live * page * tok_bytes      # only mapped pages
+
+    out_k, us_k = timed(lambda: jax.block_until_ready(
+        pda.paged_decode_attention(q, pages_k, pages_v, table, lens)))
+    out_k, us_k = timed(lambda: jax.block_until_ready(
+        pda.paged_decode_attention(q, pages_k, pages_v, table, lens)))
+    emit("kernels/paged_decode_pallas", us_k,
+         f"kv_bytes={bytes_kernel:.2e};page={page};pages_read={pages_live}")
+
+    oracle = jax.jit(pda_ref.paged_decode_attention_ref)
+    out_o, _ = timed(lambda: jax.block_until_ready(
+        oracle(q, pages_k, pages_v, table, lens)))
+    out_o, us_o = timed(lambda: jax.block_until_ready(
+        oracle(q, pages_k, pages_v, table, lens)))
+    emit("kernels/paged_decode_gather_oracle", us_o,
+         f"kv_bytes={bytes_gather:.2e};page={page};pages_read={B * P}")
+
+    trimmed = jax.jit(pda_ref.paged_decode_attention_ref)
+    tt = table[:, :live_w]
+    _, _ = timed(lambda: jax.block_until_ready(
+        trimmed(q, pages_k, pages_v, tt, lens)))
+    out_t, us_t = timed(lambda: jax.block_until_ready(
+        trimmed(q, pages_k, pages_v, tt, lens)))
+    emit("kernels/paged_decode_gather_trimmed", us_t,
+         f"kv_bytes={bytes_trim:.2e};page={page};pages_read={B * live_w}")
+
+    # regression guards: the kernel must match the oracle, and the
+    # trimmed read must actually shrink the per-step volume
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_o),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(out_t), np.asarray(out_o),
+                               rtol=2e-5, atol=2e-5)
+    assert bytes_kernel < bytes_trim <= bytes_gather
+    print(f"# paged decode: kernel reads {pages_live} pages/step "
+          f"({bytes_kernel / bytes_gather:.0%} of the gather's {B * P}); "
+          f"gather full={us_o:.0f}us trimmed={us_t:.0f}us "
+          f"(x{us_o / max(us_t, 1e-9):.2f} at this length skew)")
 
 
 def run():
@@ -44,28 +134,9 @@ def run():
         da_ref.decode_attention_ref(q1, kc, vc, lens)))
     emit("kernels/decode_attention_ref", us, f"kv_bytes={bytes_:.2e}")
 
-    # paged decode read path: block-table gather + the same attention — the
-    # serving engine's paged backend (gather cost is the paging overhead a
-    # TPU kernel would stream away)
-    from repro.models import paged_cache as pc
-    page = 64
-    P = S // page
-    n_pages = B * P
-    pages_k = kc.reshape(n_pages, page, Hkv, hd)
-    pages_v = vc.reshape(n_pages, page, Hkv, hd)
-    table = jnp.arange(n_pages, dtype=jnp.int32).reshape(B, P)
-
-    @jax.jit
-    def paged_decode(q, pk, pv, tbl, ln):
-        gk = pc.gather_sequence(pk, tbl)
-        gv = pc.gather_sequence(pv, tbl)
-        return da_ref.decode_attention_ref(q, gk, gv, ln)
-
-    jax.block_until_ready(paged_decode(q1, pages_k, pages_v, table, lens))
-    _, us = timed(lambda: jax.block_until_ready(
-        paged_decode(q1, pages_k, pages_v, table, lens)))
-    emit("kernels/decode_attention_paged_gather", us,
-         f"kv_bytes={bytes_:.2e};page={page};pages={n_pages}")
+    # paged decode read path: Pallas block-table streaming kernel vs the
+    # gather oracle (full and live-trimmed widths) at skewed lengths
+    paged_decode_case()
 
     # rmsnorm
     from repro.kernels.rmsnorm import ops as rn, ref as rn_ref
@@ -94,4 +165,10 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paged-smoke", action="store_true",
+                    help="only the paged decode A/B at tiny sizes (CI)")
+    if ap.parse_args().paged_smoke:
+        paged_decode_case(smoke=True)
+    else:
+        run()

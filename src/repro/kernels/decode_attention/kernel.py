@@ -11,9 +11,12 @@ step is HBM-bandwidth-bound — each generated token must stream the entire
   * walks the cache in (block_s, hd) VMEM tiles along the sequential minor
     grid axis with a running-softmax scratch (flash-decode);
   * prunes tail blocks past `lengths` with pl.when (ragged batches read only
-    ceil(len / block_s) blocks).
+    ceil(len / block_s) blocks);
+  * a final block that overhangs S (S not a multiple of block_s) is masked
+    in-kernel, NOT absorbed by shrinking block_s — e.g. S=300 must tile as
+    2x256-class blocks, not 75 blocks of 4.
 
-Grid: (B, Hkv, S // block_s).
+Grid: (B, Hkv, ceil(S / block_s)).
 """
 from __future__ import annotations
 
@@ -45,12 +48,16 @@ def _dec_kernel(len_ref,                       # scalar prefetch: (B,) lengths
 
     @pl.when(s_start < length)
     def _body():
+        kpos = s_start + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)
+        valid = kpos < length                       # (bs, 1)
         q = q_ref[0, 0].astype(jnp.float32)         # (q_per_kv, hd)
-        k = k_ref[0, 0].astype(jnp.float32)         # (bs, hd)
-        v = v_ref[0, 0].astype(jnp.float32)         # (bs, hd)
+        # zero invalid rows BEFORE the matmul: a ragged final block (S not a
+        # multiple of bs) overhangs the cache and reads unspecified padding
+        # that must not reach the MXU as NaN/inf
+        k = jnp.where(valid, k_ref[0, 0].astype(jnp.float32), 0.0)
+        v = jnp.where(valid, v_ref[0, 0].astype(jnp.float32), 0.0)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        cols = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(cols < length, s, NEG_INF)
+        s = jnp.where(valid[:, 0][None, :], s, NEG_INF)
 
         m_prev = m_scr[...][:, 0]
         l_prev = l_scr[...][:, 0]
@@ -75,10 +82,10 @@ def decode_attention_pallas(q, k_cache, v_cache, lengths, *, block_s: int = 256,
     B, _, Hq, hd = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
     rep = Hq // Hkv
+    # a non-power-of-two S keeps the full block size; the overhanging final
+    # block is masked in-kernel (shrinking bs here degraded S=300 to bs=4)
     bs = min(block_s, S)
-    while S % bs:
-        bs //= 2
-    ns = S // bs
+    ns = -(-S // bs)
 
     # (B, Hkv, q_per_kv, hd): group q heads by their kv head
     qg = q[:, 0].reshape(B, Hkv, rep, hd)

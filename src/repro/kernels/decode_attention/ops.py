@@ -2,18 +2,21 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
 from repro.kernels.decode_attention import kernel as _kernel
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def decode_attention(q, k_cache, v_cache, lengths, block_s: int = 256,
-                     interpret: bool = True):
+                     interpret: Optional[bool] = None):
     """Single-token GQA attention over a (possibly ragged) KV cache.
 
     q: (B,1,Hq,hd); k/v_cache: (B,S,Hkv,hd); lengths: (B,) valid cache sizes.
     """
-    return _kernel.decode_attention_pallas(q, k_cache, v_cache, lengths,
-                                           block_s=block_s, interpret=interpret)
+    return _kernel.decode_attention_pallas(
+        q, k_cache, v_cache, lengths, block_s=block_s,
+        interpret=resolve_interpret(interpret))

@@ -2,21 +2,24 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
 from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                              "block_q", "block_kv", "interpret"))
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     softcap: float = 0.0, block_q: int = 128,
-                    block_kv: int = 128, interpret: bool = True):
+                    block_kv: int = 128, interpret: Optional[bool] = None):
     """Causal/sliding-window GQA flash attention.
 
     q: (B,S,Hq,hd), k/v: (B,S,Hkv,hd) with Hq % Hkv == 0. Returns (B,S,Hq,hd).
     """
     return _kernel.flash_attention_pallas(
         q, k, v, causal=causal, window=window, softcap=softcap,
-        block_q=block_q, block_kv=block_kv, interpret=interpret)
+        block_q=block_q, block_kv=block_kv,
+        interpret=resolve_interpret(interpret))

@@ -1,0 +1,141 @@
+"""Pallas TPU paged flash-decode kernel: one new token vs a paged KV pool.
+
+The serving engine's paged backend (models/paged_cache.py) stores KV in a
+per-layer page pool `(n_pages, page_size, n_kv, hd)` addressed through a
+block table `(B, P)`. The jnp oracle first *gathers* every slot's full
+table width into a contiguous `(B, P * page_size, n_kv, hd)` buffer — per
+layer, per token, sized by the table width rather than actual lengths —
+and only then attends. At long context that double-pays the PICE decode
+hot spot (KV reads are >50% of decode latency); this kernel removes the
+gather entirely:
+
+  * `(block_table, lengths)` are scalar-prefetched, and the block table IS
+    the K/V `index_map`: grid step (b, h, p) streams physical page
+    `block_table[b, p]` HBM->VMEM directly from the pool. No contiguous
+    copy ever exists.
+  * steps past a slot's live pages re-map to its last live page — Pallas
+    elides the DMA for a revisited block — and `pl.when` skips their
+    compute, so per-step read volume is O(sum ceil(len/page)) pages, not
+    O(B * max_pages_per_seq).
+  * unmapped (-1) pages and in-page positions past `length` are pruned /
+    masked; COW-shared pages (fan-out forks) are just page ids that happen
+    to repeat across rows — each reader streams the page once, instead of
+    the gather re-materializing it N times.
+  * all `q_per_kv` query heads of one KV head ride each streamed page tile
+    (same GQA arithmetic-intensity reuse as the dense decode kernel), with
+    a running-softmax scratch accumulated across pages (flash-decode).
+
+Grid: (B, Hkv, P) with P = block-table width (callers should pre-trim it
+to the live width). Rows with length 0 return zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_dec_kernel(tbl_ref,                 # scalar prefetch: (B, P) pages
+                      len_ref,                 # scalar prefetch: (B,) lengths
+                      q_ref, k_ref, v_ref, o_ref,
+                      m_scr, l_scr, acc_scr,
+                      *, np_: int, ps: int, scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    page = tbl_ref[b, pi]
+    s_start = pi * ps
+
+    # live page with tokens to attend: unmapped (-1) and past-length pages
+    # contribute nothing and are skipped (their block was not re-fetched
+    # either — see the clamped index_map in paged_decode_attention_pallas)
+    @pl.when((s_start < length) & (page >= 0))
+    def _body():
+        kpos = s_start + jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)
+        valid = kpos < length                       # (ps, 1)
+        q = q_ref[0, 0].astype(jnp.float32)         # (q_per_kv, hd)
+        # zero invalid rows BEFORE the matmul: a ragged tail page holds
+        # stale pool bytes that must not reach the MXU as NaN/inf
+        k = jnp.where(valid, k_ref[0].astype(jnp.float32)[:, 0], 0.0)
+        v = jnp.where(valid, v_ref[0].astype(jnp.float32)[:, 0], 0.0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[:, 0][None, :], s, NEG_INF)
+
+        m_prev = m_scr[...][:, 0]
+        l_prev = l_scr[...][:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_prev * alpha + jnp.sum(p, axis=1))[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = l_scr[...][:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, lengths,
+                                  *, interpret: bool = True):
+    """q: (B,1,Hq,hd); k/v_pages: (n_pages, page, Hkv, hd);
+    block_table: (B, P) int32 page ids (-1 = unmapped); lengths: (B,) valid
+    token counts. -> (B,1,Hq,hd); zero-length rows return zeros."""
+    B, _, Hq, hd = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    P = block_table.shape[1]
+    rep = Hq // Hkv
+    table = block_table.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+
+    # (B, Hkv, q_per_kv, hd): group q heads by their kv head
+    qg = q[:, 0].reshape(B, Hkv, rep, hd)
+
+    def kv_map(b, h, p, tbl_ref, len_ref):
+        # steps past the live range re-stream the last live page: Pallas
+        # skips the DMA for a block index equal to the previous step's, so
+        # pruned pages cost neither bandwidth nor compute
+        n_live = jax.lax.div(len_ref[b] + ps - 1, ps)
+        pi = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
+        pg = tbl_ref[b, pi]
+        return (jnp.maximum(pg, 0), 0, h, 0)
+
+    kernel = functools.partial(_paged_dec_kernel, np_=P, ps=ps,
+                               scale=1.0 / float(hd) ** 0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, h, p, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda b, h, p, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        interpret=interpret,
+    )(table, lens, qg, k_pages, v_pages)
+    return out.reshape(B, 1, Hq, hd)

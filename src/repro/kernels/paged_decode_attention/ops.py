@@ -1,0 +1,27 @@
+"""Jitted public wrapper for paged flash-decode attention."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.paged_decode_attention import kernel as _kernel
+from repro.kernels.runtime import resolve_interpret
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths,
+                           interpret: Optional[bool] = None):
+    """Single-token GQA attention over a paged KV pool, streamed through
+    the block table (no gather).
+
+    q: (B,1,Hq,hd); k/v_pages: (n_pages, page_size, Hkv, hd);
+    block_table: (B, P) int32 page ids (-1 = unmapped); lengths: (B,)
+    valid token counts. Pre-trim `block_table` to the live width
+    (ceil(max(lengths)/page_size) columns) so the grid does not walk
+    columns no slot uses.
+    """
+    return _kernel.paged_decode_attention_pallas(
+        q, k_pages, v_pages, block_table, lengths,
+        interpret=resolve_interpret(interpret))

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for paged decode attention: gather-then-attend.
+
+This is exactly the serving engine's fallback read path — materialize each
+slot's block table into the contiguous layout, then run masked attention —
+kept as the numerics contract for the Pallas kernel. The deliberate
+inefficiency (reading the full table width per step) is what the kernel
+removes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import paged_cache as pc
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lengths):
+    """q: (B,1,Hq,hd); k/v_pages: (n_pages, page, Hkv, hd); block_table:
+    (B, P) int32 (-1 = unmapped); lengths: (B,) valid token counts.
+    Returns (B,1,Hq,hd); zero-length rows return zeros (matching the
+    kernel), not the uniform-softmax garbage of an all-masked SDPA."""
+    B, _, Hq, hd = q.shape
+    Hkv = k_pages.shape[2]
+    rep = Hq // Hkv
+    gk = pc.gather_sequence(k_pages, block_table)     # (B, P*page, Hkv, hd)
+    gv = pc.gather_sequence(v_pages, block_table)
+    S = gk.shape[1]
+    k = jnp.repeat(gk, rep, axis=2) if rep > 1 else gk
+    v = jnp.repeat(gv, rep, axis=2) if rep > 1 else gv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale       # (B,Hq,1,S)
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)
+    return jnp.where((lengths > 0)[:, None, None, None], out,
+                     jnp.zeros_like(out))

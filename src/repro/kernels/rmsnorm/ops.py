@@ -2,14 +2,16 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
 from repro.kernels.rmsnorm import kernel as _kernel
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(x, scale, eps: float = 1e-6, block_rows: int = 256,
-            interpret: bool = True):
+            interpret: Optional[bool] = None):
     return _kernel.rmsnorm_pallas(x, scale, eps=eps, block_rows=block_rows,
-                                  interpret=interpret)
+                                  interpret=resolve_interpret(interpret))

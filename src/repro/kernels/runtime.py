@@ -1,0 +1,22 @@
+"""Shared kernel-runtime policy helpers.
+
+Every Pallas wrapper in repro.kernels takes `interpret: Optional[bool]`;
+`None` resolves through `default_interpret()` so the same call sites compile
+to real Mosaic kernels on TPU and fall back to interpret mode everywhere
+else (CPU tests / CI) without per-caller plumbing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True when Pallas must run in interpret mode (no TPU backend)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Caller override if given, else the backend default."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -9,11 +9,12 @@ import jax.numpy as jnp
 
 from repro.kernels.ssm_scan import kernel as _kernel
 from repro.kernels.ssm_scan import ref as _ref
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssm_scan(x, dt, A, B, C, chunk: int = 128, initial_state=None,
-             interpret: bool = True):
+             interpret: Optional[bool] = None):
     """Mamba2 SSD scan. See ref.ssd_sequential_ref for semantics.
 
     The Pallas kernel computes from a zero initial state; a caller-provided
@@ -21,7 +22,7 @@ def ssm_scan(x, dt, A, B, C, chunk: int = 128, initial_state=None,
         y_extra[t] = C_t . (prod_{s<=t} decay_s) h0  ,  via the same cumsum.
     """
     y, state = _kernel.ssd_pallas(x, dt, A, B, C, chunk=chunk,
-                                  interpret=interpret)
+                                  interpret=resolve_interpret(interpret))
     if initial_state is not None:
         dA = dt.astype(jnp.float32) * A.astype(jnp.float32)[None, None, :]
         ca = jnp.cumsum(dA, axis=1)                       # (Bb,S,H)

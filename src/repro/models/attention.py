@@ -275,7 +275,8 @@ def attention_decode(cfg: ModelConfig, params: dict, x: jax.Array,
 
 def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
                            k_pages: jax.Array, v_pages: jax.Array,
-                           block_table: jax.Array, lengths: jax.Array
+                           block_table: jax.Array, lengths: jax.Array,
+                           live_pages: Optional[int] = None
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Decode step against a paged KV pool (vLLM-style block table).
 
@@ -283,9 +284,17 @@ def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
     pools; block_table: (B, P) page ids (-1 = unmapped); lengths: (B,) tokens
     already cached per slot. Returns (out, new_k_pages, new_v_pages).
 
-    The read path gathers each slot's pages into the contiguous layout and
-    runs the same masked grouped SDPA as the dense path, so dense and paged
-    backends are bit-identical (masked positions contribute exactly zero).
+    live_pages (static) trims the READ width to the first `live_pages`
+    block-table columns — callers pass ceil((max(lengths)+1)/page_size),
+    bucketed to bound recompilation. Trimmed columns are beyond every slot's
+    valid positions, whose softmax weight is exactly zero, so outputs are
+    bit-identical at any covering width; the token write uses the full table.
+
+    The read path is keyed on cfg.use_pallas: the paged flash-decode kernel
+    streams only mapped pages through the block table (per-step KV volume
+    O(sum lengths)); the fallback/oracle gathers the (trimmed) table into
+    the contiguous layout and runs the same masked grouped SDPA as the
+    dense path, so dense and paged backends stay bit-identical on it.
     """
     from repro.models import paged_cache as pc
     B, T, _ = x.shape
@@ -296,13 +305,22 @@ def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
         k = apply_rope(k, positions, cfg.rope_theta)
     k_pages, v_pages = pc.write_token(k_pages, v_pages, block_table, lengths,
                                       k, v)
-    gk = pc.gather_sequence(k_pages, block_table)
-    gv = pc.gather_sequence(v_pages, block_table)
-    Sc = gk.shape[1]
-    ki = jnp.arange(Sc)[None, None, :]
-    qpos = positions[:, :, None]
-    mask = (ki <= qpos)[:, None]
-    out = _grouped_sdpa(q, gk, gv, mask, cfg.q_per_kv, cfg.attn_logit_softcap)
+    table = block_table if live_pages is None \
+        else block_table[:, :live_pages]
+    if cfg.use_pallas and T == 1 and not cfg.attn_logit_softcap:
+        from repro.kernels.paged_decode_attention import ops as pda_ops
+        # the new token was just written at position `lengths`
+        out = pda_ops.paged_decode_attention(q, k_pages, v_pages, table,
+                                             lengths + T)
+    else:
+        gk = pc.gather_sequence(k_pages, table)
+        gv = pc.gather_sequence(v_pages, table)
+        Sc = gk.shape[1]
+        ki = jnp.arange(Sc)[None, None, :]
+        qpos = positions[:, :, None]
+        mask = (ki <= qpos)[:, None]
+        out = _grouped_sdpa(q, gk, gv, mask, cfg.q_per_kv,
+                            cfg.attn_logit_softcap)
     dt = x.dtype
     out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
     return out, k_pages, v_pages

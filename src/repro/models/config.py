@@ -168,6 +168,21 @@ class ModelConfig:
         if self.family in ("encdec",):
             assert self.encoder is not None
 
+    def validate_paged(self, page_size: int, max_len: int) -> None:
+        """Page/block alignment contract for the paged KV backend.
+
+        Each page is one (page_size, head_dim) K/V tile streamed per grid
+        step by the Pallas paged flash-decode kernel, so under use_pallas
+        page_size must be sublane-aligned (multiple of 8 covers f32 and
+        bf16 tiling); head_dim alignment is shared with the dense kernels.
+        """
+        assert page_size > 0, "page_size must be positive"
+        assert max_len % page_size == 0, "max_len must be page-aligned"
+        if self.use_pallas:
+            assert page_size % 8 == 0, (
+                "use_pallas streams (page_size, head_dim) page tiles; "
+                "page_size must be a multiple of 8 (TPU sublane alignment)")
+
     def reduced(self, **overrides) -> "ModelConfig":
         """A smoke-test-sized variant of the same family (<=2 layers, d<=512)."""
         kw = dict(

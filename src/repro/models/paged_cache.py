@@ -2,10 +2,13 @@
 
 Physical storage is a page pool per layer; sequences map to pages through a
 block table, so slot memory is allocated on demand and freed on completion —
-no per-slot max_len reservation. The TPU-native read path gathers a
-sequence's pages into the contiguous layout and reuses the standard decode
-attention (on real TPUs the decode_attention Pallas kernel streams pages
-HBM->VMEM directly; the gather formulation is its jnp oracle).
+no per-slot max_len reservation. The decode read path is keyed on
+cfg.use_pallas: kernels/paged_decode_attention streams mapped pages
+HBM->VMEM directly through the block table (no contiguous copy); the
+`gather_sequence` formulation below is its jnp oracle and the non-TPU
+fallback. Callers should trim the table they read through to the live
+width (ceil(max(lengths)/page_size) columns) so even the gather stops
+paying for `max_pages_per_seq`.
 
 Layout:
   pages:       (L, n_pages, page_size, n_kv, hd)

@@ -642,14 +642,18 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
                       cache: dict, mesh=None,
-                      active: Optional[jax.Array] = None
+                      active: Optional[jax.Array] = None,
+                      live_pages: Optional[int] = None
                       ) -> Tuple[jax.Array, dict]:
     """tokens: (B, 1) -> (logits (B, vocab), updated paged cache).
 
     Attention layers append the new token into their page pools through the
-    block table and read via the gather path; recurrent layers are identical
+    block table and read either the Pallas paged flash-decode kernel
+    (cfg.use_pallas) or the gather oracle; recurrent layers are identical
     to the dense decode. `active` masks freed rows' length advance (their
     block-table rows are -1, so their writes are already dropped).
+    `live_pages` (static) bounds the attention READ to the first live
+    block-table columns — see attention_decode_paged.
     """
     _check_paged_support(cfg)
     x = embed(cfg, params["embed"], tokens)
@@ -660,7 +664,7 @@ def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     def block(x, blk, c, kind):
         if kind in (ATTN, MOE, SHARED_ATTN):
             return _decode_block_paged(cfg, kind, blk, c, x, lengths, table,
-                                       mesh)
+                                       mesh, live_pages=live_pages)
         return _decode_block(cfg, kind, blk, c, x, lengths, mesh)
 
     new_segs = []
@@ -719,10 +723,12 @@ def fork_slot_paged(cfg: ModelConfig, cache: dict, src_slot, dst_slot,
 
 
 def _decode_block_paged(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,
-                        lengths, table, mesh=None):
+                        lengths, table, mesh=None,
+                        live_pages: Optional[int] = None):
     xin = norm(cfg, blk["norm1"], x)
     h, nk, nv = attn_lib.attention_decode_paged(
-        cfg, blk["attn"], xin, c["k_pages"], c["v_pages"], table, lengths)
+        cfg, blk["attn"], xin, c["k_pages"], c["v_pages"], table, lengths,
+        live_pages=live_pages)
     x = x + h
     newc = {"k_pages": nk, "v_pages": nv}
     if kind == MOE:

@@ -81,9 +81,10 @@ def _decode_dense_fn(cfg, params, tokens, cache, active):
     return transformer.decode_step(cfg, params, tokens, cache, active=active)
 
 
-def _decode_paged_fn(cfg, params, tokens, cache, active):
+def _decode_paged_fn(cfg, live_pages, params, tokens, cache, active):
     return transformer.decode_step_paged(cfg, params, tokens, cache,
-                                         active=active)
+                                         active=active,
+                                         live_pages=live_pages)
 
 
 @functools.lru_cache(maxsize=None)
@@ -91,8 +92,11 @@ def _jitted(cfg: ModelConfig, kind: str):
     if kind == "decode":
         return jax.jit(functools.partial(_decode_dense_fn, cfg))
     if kind == "decode_paged":
+        # live_pages is static (the read width is a shape); the engine
+        # buckets it to powers of two, so recompiles are bounded by
+        # log2(max_pages_per_seq) variants per config
         return jax.jit(functools.partial(_decode_paged_fn, cfg),
-                       donate_argnums=(2,))
+                       static_argnums=(0,), donate_argnums=(3,))
     if kind == "prefill":
         return jax.jit(functools.partial(_prefill_dense_fn, cfg))
     if kind == "prefill_paged":
@@ -179,7 +183,7 @@ class InferenceEngine:
         self._prefix_logits: Dict[int, jax.Array] = {}   # parked slot -> (1,V)
 
         if kv_backend == "paged":
-            assert max_len % page_size == 0, "max_len must be page-aligned"
+            cfg.validate_paged(page_size, max_len)
             self.page_size = page_size
             self.pages_per_seq = max_len // page_size
             self.n_pages = n_pages or max_batch * self.pages_per_seq
@@ -316,6 +320,21 @@ class InferenceEngine:
         full_shared = src.ctx_len // self.page_size
         need = -(-total // self.page_size) - full_shared
         return len(self.alloc.free) >= need
+
+    def _live_pages(self, active: List[int]) -> int:
+        """Static read width for this decode step: enough block-table
+        columns to cover every active slot's cache plus the token being
+        written, bucketed to the next power of two so jit variants stay
+        bounded. Trimmed columns are past every slot's valid positions and
+        carry exactly-zero attention weight, so any covering width is
+        bit-identical — this only stops the read path from paying for
+        `max_pages_per_seq` when the batch is short."""
+        max_ctx = max(self.slots[i].ctx_len for i in active)
+        need = -(-min(max_ctx + 1, self.max_len) // self.page_size)
+        live = 1
+        while live < need:
+            live *= 2
+        return min(live, self.pages_per_seq)
 
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -546,8 +565,13 @@ class InferenceEngine:
                 last[i, 0] = s.pending[0]
             elif s.tokens:
                 last[i, 0] = s.tokens[-1]
-        logits, self.cache = self._decode(self.params, jnp.asarray(last),
-                                          self.cache, jnp.asarray(mask))
+        if self.kv_backend == "paged":
+            logits, self.cache = self._decode(
+                self._live_pages(active), self.params, jnp.asarray(last),
+                self.cache, jnp.asarray(mask))
+        else:
+            logits, self.cache = self._decode(self.params, jnp.asarray(last),
+                                              self.cache, jnp.asarray(mask))
         self.key, sub = jax.random.split(self.key)
         toks = np.asarray(sample(logits, sub, self.sampler))
         lps = np.asarray(token_logprob(logits, jnp.asarray(toks)))
