@@ -1,5 +1,6 @@
-"""Dense vs paged serving-engine throughput under request-length skew, plus
-the PICE ensemble fan-out under copy-on-write prefix sharing.
+"""Dense vs paged serving-engine throughput under request-length skew, the
+PICE ensemble fan-out under copy-on-write prefix sharing, and the chunked-
+prefill head-of-line sweep.
 
 For each workload the same prompt stream runs through both KV backends of
 `InferenceEngine` (greedy decode, so outputs are identical) and we report
@@ -14,13 +15,27 @@ path (`generate_fanout`) — and reports the peak page usage of each. The
 shared path must stay well under N x the unshared reservation (< 0.6x is
 asserted, so CI smoke runs catch a silent regression to per-slot prefills).
 
-  PYTHONPATH=src python -m benchmarks.paged_engine_bench [--smoke]
+The chunk sweep measures decode head-of-line blocking at skewed prompt
+lengths: residents decode while long admissions arrive, and the max gap
+between consecutive decode steps is the stall one admission inflicts.
+Monolithic prefill stalls for the whole prompt; `cfg.prefill_chunk` bounds
+the stall by one chunk. Chunked must beat monolithic on max stall (asserted)
+and the whole trajectory — tokens/s, TTFT p50/p95, per-admission decode
+stall — lands in a machine-readable BENCH_serving.json for future PRs to
+regress against.
 
---smoke shrinks the workloads to a few requests/steps for CI.
+  PYTHONPATH=src python -m benchmarks.paged_engine_bench [--smoke]
+      [--chunk-sweep] [--out BENCH_serving.json]
+
+--smoke shrinks the workloads to a few requests/steps for CI (and leaves
+the sweep to the dedicated step); --chunk-sweep runs only the sweep and
+merges it into an existing BENCH_serving.json rather than clobbering the
+workload/fan-out sections.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -54,8 +69,14 @@ def _prompts(sampler, seed: int, n_req: int):
             for _ in range(n_req)]
 
 
+def _pctl(vals, q):
+    return float(np.percentile(np.asarray(vals, np.float64), q)) if vals \
+        else 0.0
+
+
 def _run(engine: InferenceEngine, prompts, max_new: int):
     engine.generate([prompts[0]], max_new=4)       # warmup / compile
+    engine.ttft.clear()
     base = engine.tokens_generated
     t0 = time.perf_counter()
     engine.generate(prompts, max_new=max_new)
@@ -63,7 +84,7 @@ def _run(engine: InferenceEngine, prompts, max_new: int):
     return (engine.tokens_generated - base) / dt, dt
 
 
-def _run_workloads(cfg, params, kv_bytes_per_tok, n_req, max_new):
+def _run_workloads(cfg, params, kv_bytes_per_tok, n_req, max_new, results):
     for wi, (name, sampler) in enumerate(WORKLOADS):
         prompts = _prompts(sampler, seed=97 + wi, n_req=n_req)
         demand = sum(min(len(p), MAX_LEN) + max_new for p in prompts)
@@ -84,6 +105,7 @@ def _run_workloads(cfg, params, kv_bytes_per_tok, n_req, max_new):
         tps_p, dt_p = _run(paged, prompts, max_new)
         paged_bytes = n_pages * PAGE * kv_bytes_per_tok
         st = paged.memory_stats()
+        ttfts = list(paged.ttft.values())
         emit(f"paged_engine/{name}_paged", dt_p * 1e6,
              f"tok_s={tps_p:.1f};kv_bytes={paged_bytes:.2e}"
              f";peak_pages={st['peak_pages']};evictions={st['evictions']}")
@@ -91,9 +113,16 @@ def _run_workloads(cfg, params, kv_bytes_per_tok, n_req, max_new):
               f"{MAX_BATCH * MAX_LEN} tok, paged pool {n_pages * PAGE} tok "
               f"({paged_bytes / dense_bytes:.0%}); throughput ratio "
               f"paged/dense={tps_p / tps:.2f}")
+        results["workloads"][name] = {
+            "tok_s_dense": tps, "tok_s_paged": tps_p,
+            "kv_bytes_dense": dense_bytes, "kv_bytes_paged": paged_bytes,
+            "peak_pages": st["peak_pages"], "evictions": st["evictions"],
+            "ttft_p50_s": _pctl(ttfts, 50), "ttft_p95_s": _pctl(ttfts, 95),
+        }
 
 
-def _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len, max_new):
+def _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len, max_new,
+                results):
     """N-way expansion of one shared prefix: independent vs COW fork path."""
     rng = np.random.default_rng(211)
     prefix = [int(t) for t in rng.integers(1, 250, size=prefix_len)]
@@ -124,6 +153,9 @@ def _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len, max_new):
     print(f"# fanout x{fanout}: prefix {prefix_len} tok "
           f"({prefix_len // PAGE} pages); peak pages unshared={peak_u} "
           f"shared={peak_s} ({peak_s / max(peak_u, 1):.0%})")
+    results["fanout"] = {"n": fanout, "peak_pages_unshared": peak_u,
+                         "peak_pages_shared": peak_s,
+                         "ratio": peak_s / max(peak_u, 1)}
 
     # regression guards: the fork path must stay bit-identical to the
     # independent submissions AND far under the unshared reservation —
@@ -133,22 +165,181 @@ def _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len, max_new):
         f"fan-out peak {peak_s} not < 0.6 x unshared {peak_u}"
 
 
-def run(smoke: bool = False):
+# ---------------------------------------------------------------------------
+# Chunked-prefill head-of-line sweep
+# ---------------------------------------------------------------------------
+
+def _stall_scenario(cfg, params, chunk, *, max_len, page, n_resident,
+                    long_len, n_long):
+    """Residents decode while `n_long` long admissions arrive; the gap
+    between consecutive engine steps is the decode stall the residents see.
+    Each long admission is chased by a short latency-critical request
+    (priority 1) that *arrives* the instant the long one is admitted: under
+    monolithic prefill it waits out the whole prompt before its own
+    `add_request` can even run, while the chunked engine admits it on the
+    next step and its (priority-ordered) chunk jumps the ingest queue.
+    Returns per-scenario metrics (second run of a warmed engine)."""
+    rng = np.random.default_rng(41 + chunk)
+    residents = [[int(t) for t in rng.integers(1, 250, size=8)]
+                 for _ in range(n_resident)]
+    longs = [[int(t) for t in rng.integers(1, 250, size=long_len)]
+             for _ in range(n_long)]
+    shorts = [[int(t) for t in rng.integers(1, 250, size=8)]
+              for _ in range(n_long)]
+
+    def once(measure: bool):
+        eng = InferenceEngine(cfg.with_(prefill_chunk=chunk), params,
+                              max_batch=n_resident + 2, max_len=max_len,
+                              kv_backend="paged", page_size=page)
+        for i, p in enumerate(residents):
+            eng.add_request(100 + i, p, max_new=10 ** 6)
+        for _ in range(3):                         # settle into steady decode
+            eng.step()
+        base = eng.tokens_generated
+        gaps = []
+        pending = list(range(n_long))
+        due_shorts: list = []                      # short ids awaiting a slot
+        arrival = {}                               # short id -> arrival wall
+        admit_wait = {}                            # short id -> wait for slot
+        t0 = last = time.perf_counter()
+        while (pending or due_shorts or any(
+                s.active and s.req_id >= 200 for s in eng.slots)):
+            long_in_flight = any(s.active and 200 <= s.req_id < 300
+                                 for s in eng.slots)
+            if due_shorts and eng.free_slots() and eng.can_admit(8):
+                sid = due_shorts.pop(0)
+                admit_wait[sid] = time.perf_counter() - arrival[sid]
+                eng.add_request(300 + sid, shorts[sid], max_new=2,
+                                priority=1)
+            elif (pending and not long_in_flight and eng.free_slots()
+                    and eng.can_admit(long_len)):
+                j = pending.pop(0)
+                # its latency-critical chaser arrives NOW — under
+                # monolithic prefill, add_request blocks the driver for
+                # the whole prompt before the chaser can be admitted
+                arrival[j] = time.perf_counter()
+                due_shorts.append(j)
+                eng.add_request(200 + j, longs[j], max_new=4)
+            eng.step()
+            now = time.perf_counter()
+            gaps.append(now - last)
+            last = now
+        dt = time.perf_counter() - t0
+        if not measure:
+            return None
+        # wall TTFT from *arrival*: admission wait + engine-side TTFT
+        short_ttfts = [admit_wait[j] + eng.ttft[300 + j]
+                       for j in range(n_long)]
+        long_ttfts = [eng.ttft[200 + j] for j in range(n_long)]
+        return {
+            "chunk": chunk,
+            "tok_s": (eng.tokens_generated - base) / dt,
+            "stall_max_s": max(gaps),
+            "stall_mean_s": float(np.mean(gaps)),
+            "step_median_s": _pctl(gaps, 50),
+            "ttft_long_p50_s": _pctl(long_ttfts, 50),
+            "ttft_long_p95_s": _pctl(long_ttfts, 95),
+            "ttft_critical_p50_s": _pctl(short_ttfts, 50),
+            "ttft_critical_p95_s": _pctl(short_ttfts, 95),
+        }
+
+    once(measure=False)                            # compile every shape
+    return once(measure=True)
+
+
+def _run_chunk_sweep(cfg, params, smoke, results):
+    max_len, page = (512, 16) if smoke else (1024, 16)
+    chunks = [0, 32, 64] if smoke else [0, 128, 256]
+    long_len = int(0.85 * max_len)
+    n_long = 2 if smoke else 4
+    sweep = {}
+    for chunk in chunks:
+        m = _stall_scenario(cfg, params, chunk, max_len=max_len, page=page,
+                            n_resident=3, long_len=long_len, n_long=n_long)
+        tag = f"chunk_{chunk or 'monolithic'}"
+        sweep[tag] = m
+        emit(f"paged_engine/sweep_{tag}", m["stall_max_s"] * 1e6,
+             f"tok_s={m['tok_s']:.1f};stall_max_s={m['stall_max_s']:.4f}"
+             f";ttft_critical_p95_s={m['ttft_critical_p95_s']:.4f}")
+        print(f"# sweep {tag}: stall_max={m['stall_max_s'] * 1e3:.1f} ms "
+              f"stall_mean={m['stall_mean_s'] * 1e3:.1f} ms "
+              f"ttft_critical_p95={m['ttft_critical_p95_s'] * 1e3:.1f} ms "
+              f"tok/s={m['tok_s']:.1f}")
+    results["chunk_sweep"] = {
+        "meta": {"max_len": max_len, "page": page, "long_len": long_len,
+                 "n_long": n_long},
+        "scenarios": sweep,
+    }
+    # regression guards: a chunked admission must never stall running
+    # decodes as long as a monolithic prefill does, and a latency-critical
+    # latecomer must see its first token faster than a monolithic engine
+    # can even admit it behind a long prefill. Violations are RETURNED so
+    # the caller can write the trajectory first — the measured numbers are
+    # most valuable exactly when the guard trips.
+    failures = []
+    mono = sweep["chunk_monolithic"]
+    for tag, m in sweep.items():
+        if m["chunk"]:
+            if not m["stall_max_s"] < mono["stall_max_s"]:
+                failures.append(
+                    f"{tag}: max decode stall {m['stall_max_s']:.4f}s not "
+                    f"below monolithic {mono['stall_max_s']:.4f}s")
+            if not m["ttft_critical_p95_s"] < mono["ttft_critical_p95_s"]:
+                failures.append(
+                    f"{tag}: critical TTFT {m['ttft_critical_p95_s']:.4f}s "
+                    f"not below monolithic "
+                    f"{mono['ttft_critical_p95_s']:.4f}s")
+    return failures
+
+
+def run(smoke: bool = False, chunk_sweep_only: bool = False,
+        out: str = "BENCH_serving.json"):
     cfg = TINY_EDGE_A.with_(dtype="float32")
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
     kv_bytes_per_tok = (2 * cfg.n_layers * cfg.n_kv_heads
                        * cfg.resolved_head_dim * 4)
+    results = {"meta": {"smoke": smoke, "model": cfg.name,
+                        "max_batch": MAX_BATCH, "max_len": MAX_LEN,
+                        "page_size": PAGE},
+               "workloads": {}}
 
-    n_req, max_new = (6, 8) if smoke else (N_REQ, MAX_NEW)
-    _run_workloads(cfg, params, kv_bytes_per_tok, n_req, max_new)
-    fanout, prefix_len, fan_new = (4, 80, 8) if smoke else (FANOUT,
-                                                            FANOUT_PREFIX,
-                                                            MAX_NEW)
-    _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len, fan_new)
+    if not chunk_sweep_only:
+        n_req, max_new = (6, 8) if smoke else (N_REQ, MAX_NEW)
+        _run_workloads(cfg, params, kv_bytes_per_tok, n_req, max_new, results)
+        fanout, prefix_len, fan_new = (4, 80, 8) if smoke else (FANOUT,
+                                                                FANOUT_PREFIX,
+                                                                MAX_NEW)
+        _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len,
+                    fan_new, results)
+    failures = []
+    if chunk_sweep_only or not smoke:
+        # smoke CI splits the sweep into its own step (--chunk-sweep after
+        # the fan-out smoke) so the stall measurement is not paid twice
+        failures = _run_chunk_sweep(cfg, params, smoke, results)
+
+    if chunk_sweep_only:
+        # enrich an existing trajectory instead of clobbering its
+        # workloads/fanout sections (CI writes both from separate steps)
+        try:
+            with open(out) as f:
+                prev = json.load(f)
+            prev["chunk_sweep"] = results["chunk_sweep"]
+            results = prev
+        except (OSError, ValueError, KeyError):
+            pass
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {out}")
+    assert not failures, "; ".join(failures)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config / few steps (CI)")
-    run(smoke=ap.parse_args().smoke)
+    ap.add_argument("--chunk-sweep", action="store_true",
+                    help="run only the chunked-prefill stall sweep")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="machine-readable trajectory output path")
+    args = ap.parse_args()
+    run(smoke=args.smoke, chunk_sweep_only=args.chunk_sweep, out=args.out)

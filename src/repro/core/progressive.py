@@ -156,12 +156,21 @@ class PICEPipeline:
         group_results = {}
         for name in names:
             eng = self.edges[name]
+            # SLA intent rides with the work: the primary member's
+            # expansion is latency-critical (priority 1), extra ensemble
+            # members opportunistic (0). In this synchronous single-tenant
+            # loop each engine only ever holds one fanout at a time, so the
+            # distinction bites when a fleet multiplexes engines across
+            # requests — eviction and chunk-ingest bandwidth then favor
+            # the critical work (see engine._evict_victim)
+            prio = 1 if name == primary else 0
             if hasattr(eng, "generate_fanout"):
                 outs = eng.generate_fanout(prefix_toks, suffix_toks,
-                                           max_new=max_new)
+                                           max_new=max_new, priority=prio)
             else:
                 outs = eng.generate([prefix_toks + sfx for sfx in suffix_toks],
-                                    max_new=max_new)
+                                    max_new=max_new,
+                                    priorities=[prio] * len(suffix_toks))
             group_results[name] = outs
         for gi in range(len(plan.groups)):
             cands = []

@@ -1,0 +1,151 @@
+"""Pallas TPU paged chunked-prefill kernel: one prompt chunk vs a paged KV
+pool.
+
+The serving engine's chunked prefill (models/transformer.prefill_chunk_paged)
+ingests a prompt in fixed C-token chunks; each chunk's queries attend
+causally within the chunk AND against every page the slot already wrote —
+a ragged cross-chunk read the jnp oracle serves by gathering the slot's
+whole block row into a contiguous buffer per layer per chunk. This kernel
+removes the gather, mirroring the paged flash-decode kernel one PR back:
+
+  * `(block_row, [offset, chunk_len])` are scalar-prefetched and the block
+    row IS the K/V `index_map`: grid step (h, p) streams physical page
+    `block_row[p]` HBM->VMEM straight from the pool.
+  * steps past the live range (`ceil((offset+chunk_len)/page)` pages)
+    re-map to the last live page — Pallas elides the DMA for a revisited
+    block — and `pl.when` prunes their compute along with unmapped (-1)
+    pages, so the read volume is O(offset + chunk_len), not O(P * page).
+  * in-page positions past `offset+chunk_len` hold stale pool bytes and are
+    zeroed before the MXU; the causal mask `kpos <= offset + (q mod C)`
+    handles the intra-chunk triangle (the chunk's own K/V is written before
+    the read, so self-attention within the chunk needs no special case).
+  * the Q tile is the whole (q_per_kv * C, hd) chunk: every query head of
+    one KV head rides each streamed page tile, with a running-softmax
+    scratch accumulated across pages (flash style).
+
+Grid: (Hkv, P) with P = block-row width (callers pre-trim to the live
+width). Query rows past `chunk_len` are computed against whatever the mask
+admits and must be discarded by the caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_pref_kernel(row_ref,                # scalar prefetch: (P,) pages
+                       info_ref,               # scalar prefetch: (2,) off,len
+                       q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr,
+                       *, np_: int, ps: int, C: int, rep: int, scale: float):
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    total = info_ref[0] + info_ref[1]          # offset + chunk_len
+    page = row_ref[pi]
+    s_start = pi * ps
+
+    # live mapped page: pages past the covering range and unmapped (-1)
+    # entries contribute nothing and are skipped (their block was not
+    # re-fetched either — see the clamped index_map in
+    # paged_prefill_attention_pallas)
+    @pl.when((s_start < total) & (page >= 0))
+    def _body():
+        kpos = s_start + jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)
+        kvalid = kpos < total                   # (ps, 1)
+        q = q_ref[0].reshape(rep * C, -1).astype(jnp.float32)
+        # zero stale rows BEFORE the matmul: positions past offset+chunk_len
+        # hold whatever the pool last held and must not reach the MXU
+        k = jnp.where(kvalid, k_ref[0].astype(jnp.float32)[:, 0], 0.0)
+        v = jnp.where(kvalid, v_ref[0].astype(jnp.float32)[:, 0], 0.0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        # causal: query row r is chunk position r mod C at absolute
+        # position offset + (r mod C)
+        qpos = info_ref[0] + jax.lax.rem(
+            jax.lax.broadcasted_iota(jnp.int32, (rep * C, 1), 0), C)
+        m = kvalid[:, 0][None, :] & (kpos[:, 0][None, :] <= qpos)
+        s = jnp.where(m, s, NEG_INF)
+
+        m_prev = m_scr[...][:, 0]
+        l_prev = l_scr[...][:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(m, p, 0.0)               # rows with no valid key yet
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_prev * alpha + jnp.sum(p, axis=1))[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = l_scr[...][:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        hd = acc_scr.shape[-1]
+        o_ref[0] = (acc_scr[...] / denom[:, None]).reshape(
+            rep, C, hd).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_pallas(q, k_pages, v_pages, block_row, offset,
+                                   chunk_len, *, interpret: bool = True):
+    """q: (1, C, Hq, hd) one slot's chunk queries; k/v_pages: (n_pages,
+    page, Hkv, hd) with the chunk already written; block_row: (P,) int32
+    page ids (-1 = unmapped); offset/chunk_len: () int32. ->
+    (1, C, Hq, hd); rows past chunk_len are unspecified."""
+    _, C, Hq, hd = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    P = block_row.shape[0]
+    rep = Hq // Hkv
+    row = block_row.astype(jnp.int32)
+    info = jnp.stack([jnp.asarray(offset, jnp.int32).reshape(()),
+                      jnp.asarray(chunk_len, jnp.int32).reshape(())])
+
+    # (Hkv, rep, C, hd): group q heads by their kv head
+    qg = jnp.moveaxis(q[0], 1, 0).reshape(Hkv, rep, C, hd)
+
+    def kv_map(h, p, row_ref, info_ref):
+        # steps past the covering range re-stream the last live page:
+        # Pallas skips the DMA for a block index equal to the previous
+        # step's, so pruned pages cost neither bandwidth nor compute
+        n_live = jax.lax.div(info_ref[0] + info_ref[1] + ps - 1, ps)
+        pi = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
+        pg = row_ref[pi]
+        return (jnp.maximum(pg, 0), 0, h, 0)
+
+    kernel = functools.partial(_paged_pref_kernel, np_=P, ps=ps, C=C,
+                               rep=rep, scale=1.0 / float(hd) ** 0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, rep, C, hd), lambda h, p, *_: (h, 0, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, rep, C, hd),
+                               lambda h, p, *_: (h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep * C, 1), jnp.float32),
+            pltpu.VMEM((rep * C, 1), jnp.float32),
+            pltpu.VMEM((rep * C, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, rep, C, hd), q.dtype),
+        interpret=interpret,
+    )(row, info, qg, k_pages, v_pages)
+    # (Hkv, rep, C, hd) -> (1, C, Hq, hd) with head index h = kv * rep + r
+    return jnp.moveaxis(out.reshape(Hq, C, hd), 0, 1)[None]

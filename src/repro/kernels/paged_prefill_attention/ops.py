@@ -1,0 +1,29 @@
+"""Jitted public wrapper for paged chunked-prefill attention."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.paged_prefill_attention import kernel as _kernel
+from repro.kernels.runtime import resolve_interpret
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(q, k_pages, v_pages, block_row, offset, chunk_len,
+                            interpret: Optional[bool] = None):
+    """Chunked-prefill GQA attention over a paged KV pool, streamed through
+    the block row (no gather).
+
+    q: (1, C, Hq, hd) one slot's chunk queries (chunk K/V already written
+    to the pages); k/v_pages: (n_pages, page_size, Hkv, hd); block_row:
+    (P,) int32 page ids (-1 = unmapped); offset: () tokens already cached
+    before the chunk; chunk_len: () valid chunk tokens. Pre-trim
+    `block_row` to the live width (ceil((offset + chunk_len) / page_size)
+    columns, bucketed) so the grid does not walk columns the slot's read
+    never needs. Rows past chunk_len are unspecified — discard them.
+    """
+    return _kernel.paged_prefill_attention_pallas(
+        q, k_pages, v_pages, block_row, offset, chunk_len,
+        interpret=resolve_interpret(interpret))

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for paged chunked-prefill attention: gather-then-attend.
+
+This is exactly the serving engine's fallback read path for one prompt
+chunk — materialize the slot's block row into the contiguous layout, write
+the chunk first, then run the causal grouped SDPA — kept as the numerics
+contract for the Pallas kernel. The oracle deliberately uses the same
+grouped-einsum formulation as the paged decode step: it is reduction-order
+stable across query counts, which is what lets a C-token chunk reproduce C
+single-token decode steps bitwise (the engine's fork-suffix / resume
+replays rely on that).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import paged_cache as pc
+
+NEG_INF = -1e30
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_row, offset,
+                                chunk_len):
+    """q: (1, C, Hq, hd) chunk queries (RoPE already applied, chunk K/V
+    already written to the pages); k/v_pages: (n_pages, page, Hkv, hd);
+    block_row: (P,) int32 page ids (-1 = unmapped); offset: () tokens
+    already cached before this chunk; chunk_len: () valid tokens in the
+    chunk. Returns (1, C, Hq, hd); rows past chunk_len are unspecified
+    (the caller discards them)."""
+    B, C, Hq, hd = q.shape
+    Hkv = k_pages.shape[2]
+    rep = Hq // Hkv
+    gk = pc.gather_sequence(k_pages, block_row[None])    # (1, P*page, Hkv, hd)
+    gv = pc.gather_sequence(v_pages, block_row[None])
+    S = gk.shape[1]
+    k = jnp.repeat(gk, rep, axis=2) if rep > 1 else gk
+    v = jnp.repeat(gv, rep, axis=2) if rep > 1 else gv
+    qpos = offset + jnp.arange(C)
+    kpos = jnp.arange(S)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale    # (1,Hq,C,S)
+    total = offset + chunk_len
+    mask = ((kpos[None, :] <= qpos[:, None])
+            & (kpos[None, :] < total))[None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)

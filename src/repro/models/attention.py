@@ -326,6 +326,58 @@ def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
     return out, k_pages, v_pages
 
 
+def attention_prefill_chunk_paged(cfg: ModelConfig, params: dict, x: jax.Array,
+                                  k_pages: jax.Array, v_pages: jax.Array,
+                                  block_row: jax.Array, offset, chunk_len,
+                                  live_pages: Optional[int] = None
+                                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One prompt chunk against a paged KV pool (chunked prefill).
+
+    x: (1, C, D) — C new tokens of ONE slot, right-padded to `chunk_len`
+    valid; block_row: (P,) the slot's block-table row; offset: () tokens
+    already written for this slot (the chunk's first logical position).
+    Writes the chunk's K/V at offset..offset+chunk_len-1, then attends each
+    chunk query causally within the chunk AND against everything the slot
+    already holds (ragged cross-chunk read). Returns (out, k_pages, v_pages).
+
+    The oracle/fallback reads through the same gather + `_grouped_sdpa`
+    formulation as the paged decode step — deliberately: the grouped einsum
+    is reduction-order stable across query counts, so a chunk of C tokens
+    produces bitwise the outputs of C single-token decode steps (fork-suffix
+    and eviction-resume replays stay bit-identical to uninterrupted decode),
+    and at C > 1 it matches the monolithic `_prefill_block` SDPA bitwise.
+    `cfg.use_pallas` routes the read through the paged-prefill Pallas kernel
+    (kernels/paged_prefill_attention), which streams only the slot's mapped
+    pages HBM->VMEM through the scalar-prefetched block row.
+    """
+    B, C, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x)
+    positions = jnp.asarray(offset, jnp.int32) + jnp.arange(C)[None]
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.models import paged_cache as pc
+    k_pages, v_pages = pc.write_prompt(k_pages, v_pages, block_row, k, v,
+                                       chunk_len, offset=offset)
+    row = block_row if live_pages is None else block_row[:live_pages]
+    if cfg.use_pallas and not cfg.attn_logit_softcap:
+        from repro.kernels.paged_prefill_attention import ops as ppa_ops
+        out = ppa_ops.paged_prefill_attention(q, k_pages, v_pages, row,
+                                              offset, chunk_len)
+    else:
+        gk = pc.gather_sequence(k_pages, row[None])
+        gv = pc.gather_sequence(v_pages, row[None])
+        Sc = gk.shape[1]
+        ki = jnp.arange(Sc)[None, None, :]
+        qpos = positions[:, :, None]
+        mask = (ki <= qpos)[:, None]
+        out = _grouped_sdpa(q, gk, gv, mask, cfg.q_per_kv,
+                            cfg.attn_logit_softcap)
+    dt = x.dtype
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+    return out, k_pages, v_pages
+
+
 def _grouped_sdpa(q, k, v, mask, q_per_kv: int, softcap: float = 0.0):
     """GQA attention WITHOUT materializing repeated K/V.
 

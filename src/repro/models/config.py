@@ -111,6 +111,13 @@ class ModelConfig:
     # PICE: response-length prediction head (0 = disabled)
     length_buckets: int = 0
 
+    # Paged-backend chunked prefill: ingest prompts in fixed chunks of this
+    # many tokens, one chunk per engine step interleaved with the decode
+    # batch (0 = monolithic prefill). Bounds decode head-of-line blocking by
+    # one chunk and collapses prefill jit variants from log2(max_len)
+    # bucket shapes to the single chunk shape.
+    prefill_chunk: int = 0
+
     # citation for the config (paper / model card)
     source: str = ""
 
@@ -182,6 +189,15 @@ class ModelConfig:
             assert page_size % 8 == 0, (
                 "use_pallas streams (page_size, head_dim) page tiles; "
                 "page_size must be a multiple of 8 (TPU sublane alignment)")
+        if self.prefill_chunk:
+            assert self.prefill_chunk > 0, "prefill_chunk must be positive"
+            assert self.prefill_chunk <= max_len, (
+                "prefill_chunk larger than max_len never splits a prompt")
+            if self.use_pallas:
+                assert self.prefill_chunk % 8 == 0, (
+                    "use_pallas tiles the chunk as the kernel's Q block; "
+                    "prefill_chunk must be a multiple of 8 (TPU sublane "
+                    "alignment)")
 
     def reduced(self, **overrides) -> "ModelConfig":
         """A smoke-test-sized variant of the same family (<=2 layers, d<=512)."""

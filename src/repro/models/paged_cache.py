@@ -67,18 +67,21 @@ def write_token(pages_k: jax.Array, pages_v: jax.Array, block_table: jax.Array,
 
 
 def write_prompt(pages_k: jax.Array, pages_v: jax.Array, block_row: jax.Array,
-                 new_k: jax.Array, new_v: jax.Array, prompt_len: jax.Array
-                 ) -> Tuple[jax.Array, jax.Array]:
-    """Scatter a prefilled prompt's K/V into one sequence's pages.
+                 new_k: jax.Array, new_v: jax.Array, prompt_len: jax.Array,
+                 offset=0) -> Tuple[jax.Array, jax.Array]:
+    """Scatter a prefilled prompt (or prompt chunk) K/V into one sequence's
+    pages.
 
     pages_*: (n_pages, page, kv, hd); block_row: (P,) this sequence's block-
-    table row; new_*: (1, S, kv, hd) right-padded; prompt_len: () valid count.
+    table row; new_*: (1, S, kv, hd) right-padded; prompt_len: () valid count
+    in new_*; offset: () logical position of new_*[0, 0] — chunked prefill
+    writes chunk i at offset i * chunk, spanning page boundaries freely.
     """
     n_pages, page_size = pages_k.shape[0], pages_k.shape[1]
     S = new_k.shape[1]
-    pos = jnp.arange(S)
+    pos = jnp.asarray(offset, jnp.int32) + jnp.arange(S)
     page_of = jnp.take(block_row, pos // page_size, mode="clip")
-    valid = (pos < prompt_len) & (page_of >= 0)
+    valid = (jnp.arange(S) < prompt_len) & (page_of >= 0)
     safe_page = jnp.where(valid, page_of, n_pages)       # OOB rows dropped
     off = pos % page_size
     pages_k = pages_k.at[safe_page, off].set(new_k[0], mode="drop")

@@ -640,6 +640,68 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     return logits, new_cache
 
 
+def prefill_chunk_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                        cache: dict, slot, offset, chunk_len,
+                        live_pages: Optional[int] = None, mesh=None
+                        ) -> Tuple[jax.Array, dict]:
+    """Ingest one prompt chunk (tokens: (1, C) right-padded to `chunk_len`
+    valid) into the shared paged cache at batch row `slot`, whose block-table
+    row must already map pages through offset + chunk_len tokens. Chunk
+    queries attend causally within the chunk and against the slot's
+    already-written context (ragged cross-chunk read); `live_pages` (static)
+    trims the read to the covering block-table columns exactly like the
+    decode step. Returns (logits (1, V) at the last valid chunk token,
+    cache) — only the final chunk's logits seed sampling.
+
+    Chunked ingestion requires an attention-only stack: recurrent segments
+    (SSM / xLSTM) would need their scan state carried across chunks, which
+    their fwd paths do not expose — the engine falls back to monolithic
+    prefill for those families.
+    """
+    _check_paged_support(cfg)
+    assert all(kind in (ATTN, MOE, SHARED_ATTN)
+               for kind, _ in segments_of(cfg)), \
+        "chunked prefill supports attention-only stacks"
+    x = embed(cfg, params["embed"], tokens)
+    B, C, _ = x.shape
+    clen = jnp.asarray(chunk_len, jnp.int32).reshape(())
+    off = jnp.asarray(offset, jnp.int32).reshape(())
+    block_row = cache["block_table"][slot]
+    x = _constrain(cfg, mesh, x)
+
+    def block(x, blk, c, kind):
+        xin = norm(cfg, blk["norm1"], x)
+        h, nk, nv = attn_lib.attention_prefill_chunk_paged(
+            cfg, blk["attn"], xin, c["k_pages"], c["v_pages"], block_row,
+            off, clen, live_pages=live_pages)
+        x = x + h
+        return _prefill_block_tail(cfg, kind, blk, x,
+                                   {"k_pages": nk, "v_pages": nv}, None, mesh)
+
+    new_segs = []
+    for (kind, count), seg, segc in zip(segments_of(cfg), params["segments"],
+                                        cache["segments"]):
+        if kind == SHARED_ATTN:
+            x, newc = block(x, params["shared"],
+                            jax.tree.map(lambda a: a[0], segc), kind)
+            newc = jax.tree.map(lambda a: a[None], newc)
+        else:
+            def scan_body(x, inp, kind=kind):
+                blk, c = inp
+                x = _constrain(cfg, mesh, x)
+                return block(x, blk, c, kind)
+            x, newc = _scan_or_unroll(cfg, scan_body, x, (seg, segc))
+        new_segs.append(newc)
+
+    x = norm(cfg, params["final_norm"], x)
+    idx = jnp.clip(clen - 1, 0, C - 1)
+    last_h = x[:, idx]
+    logits = unembed(cfg, params["embed"], last_h[:, None])[:, 0]
+    new_cache = {"lengths": cache["lengths"].at[slot].set(off + clen),
+                 "block_table": cache["block_table"], "segments": new_segs}
+    return logits, new_cache
+
+
 def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
                       cache: dict, mesh=None,
                       active: Optional[jax.Array] = None,

@@ -87,6 +87,13 @@ def _decode_paged_fn(cfg, live_pages, params, tokens, cache, active):
                                          live_pages=live_pages)
 
 
+def _prefill_chunk_fn(cfg, live_pages, params, tokens, cache, slot, offset,
+                      chunk_len):
+    return transformer.prefill_chunk_paged(cfg, params, tokens, cache, slot,
+                                           offset, chunk_len,
+                                           live_pages=live_pages)
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted(cfg: ModelConfig, kind: str):
     if kind == "decode":
@@ -102,6 +109,13 @@ def _jitted(cfg: ModelConfig, kind: str):
     if kind == "prefill_paged":
         return jax.jit(functools.partial(transformer.prefill_paged, cfg),
                        donate_argnums=(2,))
+    if kind == "prefill_chunk":
+        # live_pages is static (the read width is a shape), bucketed like
+        # the decode step; token shape is always (1, cfg.prefill_chunk), so
+        # chunked engines compile one chunk variant per live-width bucket
+        # instead of one prefill per prompt-length bucket
+        return jax.jit(functools.partial(_prefill_chunk_fn, cfg),
+                       static_argnums=(0,), donate_argnums=(3,))
     if kind == "fork":
         return jax.jit(functools.partial(transformer.fork_slot_paged, cfg),
                        donate_argnums=(0,))
@@ -130,6 +144,14 @@ class Slot:
     pending: List[int] = dataclasses.field(default_factory=list)
     fork_src: int = -1      # parked slot this one was forked from (-1: none)
     suffix: List[int] = dataclasses.field(default_factory=list)
+    # prompt tokens not yet ingested (chunked prefill): while non-empty the
+    # slot is excluded from the decode batch and step() feeds it one chunk
+    # at a time; the first sample comes from the final chunk's logits
+    prefill_toks: List[int] = dataclasses.field(default_factory=list)
+    # eviction priority (higher = more latency-critical, evicted last);
+    # PICE maps cloud-sketch / SLA-bound work above opportunistic
+    # ensemble expansions
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -145,6 +167,7 @@ class _Resume:
     carry_lps: List[float]
     share_from: int = -1
     suffix: List[int] = dataclasses.field(default_factory=list)
+    priority: int = 0
 
 
 class InferenceEngine:
@@ -181,6 +204,12 @@ class InferenceEngine:
         self._window_logical = 0
         self._resume_queue: List[_Resume] = []
         self._prefix_logits: Dict[int, jax.Array] = {}   # parked slot -> (1,V)
+        # per-request time-to-first-token telemetry: admission time survives
+        # eviction/resume (TTFT spans the preemption), recorded once at the
+        # first committed token; benchmarks read + clear `ttft`
+        self._t_admit: Dict[int, float] = {}
+        self.ttft: Dict[int, float] = {}
+        self.prefill_chunk = 0
 
         if kv_backend == "paged":
             cfg.validate_paged(page_size, max_len)
@@ -197,6 +226,15 @@ class InferenceEngine:
             self._decode = _jitted(cfg, "decode_paged")
             self._prefill_paged = _jitted(cfg, "prefill_paged")
             self._fork = _jitted(cfg, "fork")
+            # chunked prefill needs an attention-only stack (recurrent
+            # segments cannot resume their scan state mid-prompt): other
+            # families silently keep the monolithic path
+            chunkable = all(
+                kind in ("attn", "moe", "shared_attn")
+                for kind, _ in transformer.segments_of(cfg))
+            self.prefill_chunk = cfg.prefill_chunk if chunkable else 0
+            if self.prefill_chunk:
+                self._prefill_chunk = _jitted(cfg, "prefill_chunk")
         else:
             self.cache = transformer.init_cache(cfg, max_batch, max_len)
             self._decode = _jitted(cfg, "decode")
@@ -249,14 +287,20 @@ class InferenceEngine:
         self.block_table[slot, :] = -1
         self._push_table()
 
-    def _evict_youngest(self, protect: int) -> bool:
-        """Preempt the youngest active slot other than `protect`; its pages
+    def _evict_victim(self, protect: int) -> bool:
+        """Preempt one active slot other than `protect`: the lowest-priority
+        one, youngest-first within a priority class. Latency-critical work
+        (cloud sketches, SLA-bound requests — higher `priority`) is only
+        preempted once every opportunistic expansion is gone, so a parallel
+        fan-out can never push a critical slot off the pool. Victims' pages
         return to the pool and the request is queued for resubmission."""
         victims = [i for i, s in enumerate(self.slots)
                    if s.active and i != protect]
         if not victims:
             return False
-        v = max(victims, key=lambda i: self.slots[i].arrival)
+        v = min(victims,
+                key=lambda i: (self.slots[i].priority,
+                               -self.slots[i].arrival))
         s = self.slots[v]
         # release only frees the victim's *unique* pages (refcounted), never
         # prefix pages its siblings still read. A fork whose prefix is still
@@ -271,10 +315,12 @@ class InferenceEngine:
             max_new=s.max_new, carry_tokens=list(s.tokens),
             carry_lps=list(s.logprobs),
             share_from=s.fork_src if refork else -1,
-            suffix=list(s.suffix) if refork else []))
+            suffix=list(s.suffix) if refork else [],
+            priority=s.priority))
         self._release_slot_pages(v)
         s.active, s.evicted, s.req_id = False, True, -1
         s.pending, s.fork_src, s.suffix = [], -1, []
+        s.prefill_toks = []     # a mid-prefill victim restarts its chunks
         self.evictions += 1
         return True
 
@@ -329,27 +375,82 @@ class InferenceEngine:
         carry exactly-zero attention weight, so any covering width is
         bit-identical — this only stops the read path from paying for
         `max_pages_per_seq` when the batch is short."""
-        max_ctx = max(self.slots[i].ctx_len for i in active)
-        need = -(-min(max_ctx + 1, self.max_len) // self.page_size)
-        live = 1
-        while live < need:
-            live *= 2
-        return min(live, self.pages_per_seq)
+        return self._chunk_live(max(self.slots[i].ctx_len
+                                    for i in active) + 1)
 
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots)
                 if not s.active and not s.parked]
 
+    def _alloc_slot_pages(self, slot: int, n_tokens: int):
+        """Map a fresh page chain for `n_tokens` into the slot's table row."""
+        pages = self.alloc.alloc_for(slot, n_tokens)    # MemoryError if dry
+        self._track_peak()
+        self.block_table[slot, :] = -1
+        self.block_table[slot, :len(pages)] = pages
+        self._push_table()
+
+    def _chunk_live(self, end: int) -> int:
+        """Static covering read width through position `end`, bucketed to
+        the next power of two (shared by the decode step and chunk ingest
+        so both paths honor one recompile contract)."""
+        need = -(-min(end, self.max_len) // self.page_size)
+        live = 1
+        while live < need:
+            live *= 2
+        return min(live, self.pages_per_seq)
+
+    def _feed_chunk(self, slot: int, chunk: List[int], offset: int):
+        """One (1, prefill_chunk)-shaped ingest call: pad, pick the covering
+        live width, write+attend the chunk at `offset`. Returns the chunk's
+        last-valid-token logits (1, V)."""
+        padded = np.zeros((1, self.prefill_chunk), np.int32)
+        padded[0, :len(chunk)] = chunk
+        live = self._chunk_live(offset + len(chunk))
+        logits, self.cache = self._prefill_chunk(
+            live, self.params, jnp.asarray(padded), self.cache,
+            jnp.asarray(slot, jnp.int32), jnp.asarray(offset, jnp.int32),
+            jnp.asarray(len(chunk), jnp.int32))
+        return logits
+
+    def _ingest_chunk(self, slot: int):
+        """Feed the slot's next prompt chunk into the paged cache. After the
+        final chunk, the first token is sampled from the chunk's logits —
+        the same (1, V) sample a monolithic `add_request` takes, so the
+        engine's PRNG stream (and therefore sampled output) is unchanged."""
+        s = self.slots[slot]
+        chunk = s.prefill_toks[:self.prefill_chunk]
+        s.prefill_toks = s.prefill_toks[self.prefill_chunk:]
+        logits = self._feed_chunk(slot, chunk, s.ctx_len)
+        s.ctx_len += len(chunk)
+        if not s.prefill_toks:
+            self.key, sub = jax.random.split(self.key)
+            tok = sample(logits, sub, self.sampler)
+            lp = token_logprob(logits, tok)
+            self._commit(slot, int(tok[0]), float(lp[0]))
+        return logits
+
+    def _prefill_into_chunks(self, slot: int, toks: List[int]):
+        """Synchronous chunked ingest of a whole prompt (prefill_prefix and
+        direct callers outside the step loop); returns final-chunk logits.
+        Performs no PRNG splits, matching `_ingest_chunk`'s contract that
+        only the first-token sample advances the key stream. An empty
+        prompt ingests one zero-length chunk so callers always get logits
+        (matching the monolithic path's zero-padded prefill)."""
+        C = self.prefill_chunk
+        logits = None
+        for start in range(0, max(len(toks), 1), C):
+            logits = self._feed_chunk(slot, toks[start:start + C], start)
+        return logits
+
     def _prefill_into(self, slot: int, toks: List[int], padded: np.ndarray):
         """Prefill `toks` into batch row `slot` (either backend); returns
         last-token logits (1, V)."""
         if self.kv_backend == "paged":
-            pages = self.alloc.alloc_for(slot, len(toks))   # MemoryError if dry
-            self._track_peak()
-            self.block_table[slot, :] = -1
-            self.block_table[slot, :len(pages)] = pages
-            self._push_table()
+            self._alloc_slot_pages(slot, len(toks))
+            if self.prefill_chunk:
+                return self._prefill_into_chunks(slot, toks)
             logits, self.cache = self._prefill_paged(
                 self.params, jnp.asarray(padded), self.cache,
                 jnp.asarray(slot, jnp.int32),
@@ -396,6 +497,7 @@ class InferenceEngine:
         s.req_id, s.active, s.parked = -1, False, True
         s.prompt = list(prefix)
         s.tokens, s.logprobs, s.pending = [], [], []
+        s.prefill_toks = []
         s.ctx_len = len(toks)
         self._prefix_logits[slot] = logits
         self.busy_s += time.perf_counter() - t0
@@ -414,14 +516,23 @@ class InferenceEngine:
                     carry_tokens: Optional[List[int]] = None,
                     carry_lps: Optional[List[float]] = None,
                     share_from: Optional[int] = None,
-                    suffix: Optional[List[int]] = None) -> int:
+                    suffix: Optional[List[int]] = None,
+                    priority: int = 0) -> int:
         """Admit a request. share_from forks a parked prefix slot
         copy-on-write instead of prefilling; `suffix` tokens (the part of
-        the logical prompt beyond the shared prefix) are then teacher-forced
-        through the decode path before sampling starts — as are any carried
-        tokens when a preempted fork resumes. `prompt` must be the full
-        logical prompt (prefix + suffix) so eviction can always fall back to
-        a monolithic resume."""
+        the logical prompt beyond the shared prefix) are then ingested into
+        the cache before sampling starts — as are any carried tokens when a
+        preempted fork resumes. `prompt` must be the full logical prompt
+        (prefix + suffix) so eviction can always fall back to a monolithic
+        resume. `priority` orders eviction: lower-priority slots are
+        preempted first (see `_evict_victim`).
+
+        With `cfg.prefill_chunk` set (paged backend), admission only maps
+        the prompt's pages and queues its tokens: `step()` then ingests one
+        chunk per call interleaved with the decode batch, so a long prompt
+        never stalls running decodes for more than one chunk. Fork suffixes
+        and resume carries ride the same chunked path (multi-token ingest)
+        instead of token-by-token teacher forcing."""
         suffix = list(suffix or [])
         carry_tokens = carry_tokens or []
         carry_lps = carry_lps or []
@@ -438,7 +549,12 @@ class InferenceEngine:
             raise RuntimeError("no free slot")
         slot = free[0]
         t0 = time.perf_counter()
+        self._t_admit.setdefault(req_id, t0)
+        while len(self._t_admit) > 4096:     # bound never-committed leftovers
+            self._t_admit.pop(next(iter(self._t_admit)))
 
+        ingest: List[int] = []          # chunked path: tokens step() feeds
+        logits = None
         if share_from is not None:
             src = self.slots[share_from]
             # MemoryError if the tail copy cannot be allocated
@@ -456,6 +572,30 @@ class InferenceEngine:
             logits = self._prefix_logits[share_from]
             ctx = src.ctx_len
             pending = suffix + carry_tokens
+            if self.prefill_chunk and pending:
+                # the replay goes through multi-token chunks: map the pages
+                # it will write up front (can_admit_fork gated on this need)
+                target = -(-min(ctx + len(pending), self.max_len)
+                           // self.page_size)
+                while len(self.alloc.owned[slot]) < target:
+                    p = self.alloc.extend(
+                        slot, (len(self.alloc.owned[slot]) + 1)
+                        * self.page_size)
+                    self.block_table[slot,
+                                     len(self.alloc.owned[slot]) - 1] = p
+                self._push_table()
+                self._track_peak()
+                ingest, pending = pending, []
+        elif self.prefill_chunk:
+            full = list(prompt) + carry_tokens
+            toks = full[-self.max_len:]
+            self._alloc_slot_pages(slot, len(toks))
+            ctx, pending, ingest = 0, [], list(toks)
+            if not toks:
+                # degenerate empty prompt: ingest one zero-length chunk now
+                # so the sample below has logits (the monolithic path
+                # likewise prefills a zero-padded buffer and samples)
+                logits = self._prefill_into_chunks(slot, toks)
         else:
             toks, padded = self._pad_prompt(list(prompt) + carry_tokens,
                                             self.max_len)
@@ -470,19 +610,22 @@ class InferenceEngine:
         s.max_new, s.generated = max_new, len(carry_tokens)
         s.ctx_len = ctx
         s.pending = list(pending)
+        s.prefill_toks = list(ingest)
         s.fork_src = share_from if share_from is not None else -1
         s.suffix = suffix if share_from is not None else []
         s.evicted = False
+        s.priority = priority
         s.arrival = self._arrivals
         self._arrivals += 1
         self._track_peak()
-        if not s.pending:
+        if not s.pending and not s.prefill_toks:
             # sample the first token from (possibly shared) prefill logits
             self.key, sub = jax.random.split(self.key)
             tok = sample(logits, sub, self.sampler)
             lp = token_logprob(logits, tok)
             self._commit(slot, int(tok[0]), float(lp[0]))
-        # else: the first sample comes after the last suffix token is fed
+        # else: the first sample comes after the last suffix/prompt token
+        # is ingested
         self.busy_s += time.perf_counter() - t0
         return slot
 
@@ -492,6 +635,13 @@ class InferenceEngine:
         s.logprobs.append(lp)
         s.generated += 1
         self.tokens_generated += 1
+        if s.generated == 1 and s.req_id in self._t_admit:
+            self.ttft[s.req_id] = (time.perf_counter()
+                                   - self._t_admit.pop(s.req_id))
+            # bound the telemetry in long-running fleets: keep the most
+            # recent window (dicts preserve insertion order)
+            while len(self.ttft) > 4096:
+                self.ttft.pop(next(iter(self.ttft)))
         # context capacity counts as completion: decoding past max_len would
         # overwrite live cache positions (in either backend), so both
         # backends stop at the same point and stay bit-identical
@@ -509,7 +659,9 @@ class InferenceEngine:
         lone request cannot grow."""
         changed = False
         for i, s in enumerate(self.slots):
-            if not s.active or s.ctx_len >= self.max_len:
+            # slots mid-chunked-prefill hold pages for their whole prompt
+            # already and are not in the decode batch — nothing to grow
+            if not s.active or s.ctx_len >= self.max_len or s.prefill_toks:
                 continue
             cow, cow_done = None, False
             while True:
@@ -520,7 +672,7 @@ class InferenceEngine:
                     newp = self.alloc.extend(i, s.ctx_len + 1)
                     break
                 except MemoryError:
-                    if not self._evict_youngest(protect=i):
+                    if not self._evict_victim(protect=i):
                         raise
             if cow is not None:
                 old, new = cow
@@ -541,21 +693,50 @@ class InferenceEngine:
             self._push_table()
 
     def step(self) -> bool:
-        """One decode step for all active slots. Returns True if work done.
+        """One engine step: ingest at most one prompt chunk (chunked
+        prefill), then one decode step for every decodable slot. Returns
+        True if work was done.
 
-        Slots with a pending suffix (fork path) are teacher-forced: the step
-        feeds `pending[0]` instead of the last sampled token and the sampled
-        output is discarded until the suffix is exhausted — the logits after
-        the final suffix token seed the first real sample."""
-        active = [i for i, s in enumerate(self.slots) if s.active]
-        if not active:
+        The chunk goes to the oldest admission still ingesting, so decode
+        latency between steps is bounded by one chunk of prefill compute —
+        a long prompt no longer head-of-line-blocks the whole batch for its
+        full monolithic prefill. Slots finish ingesting and join the decode
+        batch in the same step their final chunk lands (mirroring the
+        monolithic path, where `add_request` samples and the next `step`
+        decodes).
+
+        Slots with a pending suffix (fork path, monolithic engines) are
+        teacher-forced: the step feeds `pending[0]` instead of the last
+        sampled token and the sampled output is discarded until the suffix
+        is exhausted — the logits after the final suffix token seed the
+        first real sample."""
+        if not any(s.active for s in self.slots):
             return False
         t0 = time.perf_counter()
+        worked = False
+        if self.prefill_chunk:
+            pref = [i for i, s in enumerate(self.slots)
+                    if s.active and s.prefill_toks]
+            if pref:
+                # highest priority first (a latency-critical latecomer's
+                # chunks jump the queue of a long opportunistic ingest),
+                # oldest admission within a class
+                self._ingest_chunk(min(
+                    pref, key=lambda j: (-self.slots[j].priority,
+                                         self.slots[j].arrival)))
+                worked = True
+        active = [i for i, s in enumerate(self.slots)
+                  if s.active and not s.prefill_toks]
+        if not active:
+            self.busy_s += time.perf_counter() - t0
+            return worked
         if self.kv_backend == "paged":
             self._grow_pages()
-            active = [i for i, s in enumerate(self.slots) if s.active]
+            active = [i for i, s in enumerate(self.slots)
+                      if s.active and not s.prefill_toks]
             if not active:
-                return False
+                self.busy_s += time.perf_counter() - t0
+                return worked
         last = np.zeros((self.max_batch, 1), np.int32)
         mask = np.zeros((self.max_batch,), bool)
         mask[active] = True
@@ -587,16 +768,23 @@ class InferenceEngine:
         return True
 
     # ------------------------------------------------------------------
-    def generate(self, prompts: List[List[int]], max_new: int = 128
+    def generate(self, prompts: List[List[int]], max_new: int = 128,
+                 priorities: Optional[List[int]] = None
                  ) -> List[Tuple[List[int], List[float]]]:
-        """Batch-generate; returns (tokens, logprobs) per prompt."""
+        """Batch-generate; returns (tokens, logprobs) per prompt.
+        `priorities` (optional, per prompt) orders preemption under memory
+        pressure — higher survives longer."""
+        priorities = priorities or [0] * len(prompts)
+        assert len(priorities) == len(prompts), \
+            "priorities must match prompts one-to-one"
         pending = [_Resume(req_id=i, prompt=p, max_new=max_new,
-                           carry_tokens=[], carry_lps=[])
-                   for i, p in enumerate(prompts)]
+                           carry_tokens=[], carry_lps=[], priority=pr)
+                   for i, (p, pr) in enumerate(zip(prompts, priorities))]
         return self._run(pending)
 
     def generate_fanout(self, prefix: List[int],
-                        suffixes: List[List[int]], max_new: int = 128
+                        suffixes: List[List[int]], max_new: int = 128,
+                        priority: int = 0
                         ) -> List[Tuple[List[int], List[float]]]:
         """Expand one shared prefix N ways (the PICE sketch fan-out: every
         ensemble member / parallel expansion segment repeats the same
@@ -608,11 +796,13 @@ class InferenceEngine:
         if (self.kv_backend != "paged" or self.max_batch < 2
                 or not self.prefix_sharing):
             return self.generate([list(prefix) + list(s) for s in suffixes],
-                                 max_new=max_new)
+                                 max_new=max_new,
+                                 priorities=[priority] * len(suffixes))
         p_slot = self.prefill_prefix(prefix)
         pending = [_Resume(req_id=i, prompt=list(prefix) + list(sfx),
                            max_new=max_new, carry_tokens=[], carry_lps=[],
-                           share_from=p_slot, suffix=list(sfx))
+                           share_from=p_slot, suffix=list(sfx),
+                           priority=priority)
                    for i, sfx in enumerate(suffixes)]
         try:
             return self._run(pending)
@@ -622,6 +812,11 @@ class InferenceEngine:
     def _run(self, pending: List[_Resume]
              ) -> List[Tuple[List[int], List[float]]]:
         n = len(pending)
+        for r in pending:
+            # fresh submissions must not inherit a stale admission stamp
+            # from an earlier run that reused the same req_id (eviction
+            # resumes within THIS run still keep their original stamp)
+            self._t_admit.pop(r.req_id, None)
         results: Dict[int, Tuple[List[int], List[float]]] = {}
         submitted: Dict[int, int] = {}          # req_id -> slot
         while pending or any(s.active for s in self.slots):
@@ -644,7 +839,7 @@ class InferenceEngine:
                     r.req_id, r.prompt, r.max_new,
                     carry_tokens=r.carry_tokens, carry_lps=r.carry_lps,
                     share_from=r.share_from if r.share_from >= 0 else None,
-                    suffix=r.suffix)
+                    suffix=r.suffix, priority=r.priority)
                 submitted[r.req_id] = slot
             self.step()
             done = [rid for rid, sl in submitted.items()

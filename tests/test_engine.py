@@ -303,6 +303,46 @@ def test_release_prefix_frees_parked_pages(params):
 
 
 # ---------------------------------------------------------------------------
+# priority-aware eviction (SLA class / sketch level ordering)
+# ---------------------------------------------------------------------------
+
+def test_eviction_prefers_low_priority_over_youth(params):
+    """Victim selection orders by (priority, then youth): a latency-critical
+    slot admitted LAST must survive while an older opportunistic one is
+    preempted — the pre-priority engine would have evicted the youngest."""
+    eng = _engine(params, kv_backend="paged", page_size=16)
+    lo = eng.add_request(0, [5, 6, 7], max_new=40, priority=0)
+    hi = eng.add_request(1, [8, 9, 10], max_new=40, priority=1)
+    assert eng.slots[hi].arrival > eng.slots[lo].arrival
+    assert eng._evict_victim(protect=-1)
+    assert eng.slots[lo].evicted and not eng.slots[lo].active
+    assert eng.slots[hi].active, "high-priority slot must not be evicted"
+
+
+def test_eviction_equal_priority_falls_back_to_youngest(params):
+    eng = _engine(params, kv_backend="paged", page_size=16)
+    old = eng.add_request(0, [5, 6, 7], max_new=40)
+    young = eng.add_request(1, [8, 9, 10], max_new=40)
+    assert eng._evict_victim(protect=-1)
+    assert eng.slots[young].evicted
+    assert eng.slots[old].active
+
+
+def test_priority_preserved_across_resume(params):
+    """A preempted request resumes with its priority intact (threaded
+    through the resume queue), and still completes correctly."""
+    prompts = [[65, 66, 67, 68], [70, 71], [80, 81, 82]]
+    ref = _engine(params, max_len=64).generate(prompts, max_new=24)
+    eng = _engine(params, kv_backend="paged", page_size=8, n_pages=6,
+                  max_len=64)
+    out = eng.generate(prompts, max_new=24, priorities=[2, 1, 0])
+    assert eng.evictions > 0
+    for (td, _), (tp, _) in zip(ref, out):
+        assert td == tp
+    assert eng.alloc.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
 # serving-layer bug sweep
 # ---------------------------------------------------------------------------
 
