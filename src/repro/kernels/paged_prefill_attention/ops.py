@@ -27,3 +27,22 @@ def paged_prefill_attention(q, k_pages, v_pages, block_row, offset, chunk_len,
     return _kernel.paged_prefill_attention_pallas(
         q, k_pages, v_pages, block_row, offset, chunk_len,
         interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention_ragged(q, k_pages, v_pages, block_rows, offsets,
+                                   lens, interpret: Optional[bool] = None):
+    """Batched ragged chunked-prefill GQA attention: R slots' chunks against
+    their own page chains in one call (the engine's batched-ingest op).
+
+    q: (R, C, Hq, hd) — row r is slot r's next chunk queries (each row's
+    chunk K/V already written to the pages); k/v_pages: (n_pages, page_size,
+    Hkv, hd); block_rows: (R, P) int32 per-row page ids (-1 = unmapped);
+    offsets/lens: (R,) int32. Pre-trim `block_rows` to the shared live width
+    (ceil(max(offsets + lens) / page_size) columns, bucketed) — each row
+    still prunes down to its own covering range via scalar prefetch. Row r
+    positions past lens[r] are unspecified, as are padding rows (lens == 0).
+    """
+    return _kernel.paged_prefill_attention_ragged_pallas(
+        q, k_pages, v_pages, block_rows, offsets, lens,
+        interpret=resolve_interpret(interpret))

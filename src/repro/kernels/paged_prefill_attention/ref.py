@@ -46,3 +46,34 @@ def paged_prefill_attention_ref(q, k_pages, v_pages, block_row, offset,
     logits = jnp.where(mask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)
+
+
+def paged_prefill_attention_ragged_ref(q, k_pages, v_pages, block_rows,
+                                       offsets, lens):
+    """Ragged multi-slot oracle: R independent chunk reads in one batch.
+
+    q: (R, C, Hq, hd) — row r is slot r's chunk queries (RoPE applied, chunk
+    K/V already written); block_rows: (R, P) per-row block-table rows;
+    offsets/lens: (R,). Returns (R, C, Hq, hd); row r positions past lens[r]
+    are unspecified (callers discard them), as is every position of padding
+    rows (lens[r] == 0).
+    """
+    R, C, Hq, hd = q.shape
+    Hkv = k_pages.shape[2]
+    rep = Hq // Hkv
+    gk = pc.gather_sequence(k_pages, block_rows)         # (R, P*page, Hkv, hd)
+    gv = pc.gather_sequence(v_pages, block_rows)
+    S = gk.shape[1]
+    k = jnp.repeat(gk, rep, axis=2) if rep > 1 else gk
+    v = jnp.repeat(gv, rep, axis=2) if rep > 1 else gv
+    qpos = offsets[:, None] + jnp.arange(C)[None, :]              # (R, C)
+    kpos = jnp.arange(S)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale            # (R,Hq,C,S)
+    total = (offsets + lens)[:, None, None]                       # (R, 1, 1)
+    mask = ((kpos[None, None, :] <= qpos[:, :, None])
+            & (kpos[None, None, :] < total))[:, None]             # (R,1,C,S)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)

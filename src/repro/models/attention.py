@@ -276,7 +276,8 @@ def attention_decode(cfg: ModelConfig, params: dict, x: jax.Array,
 def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
                            k_pages: jax.Array, v_pages: jax.Array,
                            block_table: jax.Array, lengths: jax.Array,
-                           live_pages: Optional[int] = None
+                           live_pages: Optional[int] = None,
+                           active: Optional[jax.Array] = None
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Decode step against a paged KV pool (vLLM-style block table).
 
@@ -295,6 +296,10 @@ def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
     O(sum lengths)); the fallback/oracle gathers the (trimmed) table into
     the contiguous layout and runs the same masked grouped SDPA as the
     dense path, so dense and paged backends stay bit-identical on it.
+
+    `active` (B,) bool, when given, drops inactive rows' K/V writes — the
+    plan/run engine defers freed slots' block-table clears, so a stale row
+    may still map pages a COW sibling owns (see pc.write_token).
     """
     from repro.models import paged_cache as pc
     B, T, _ = x.shape
@@ -304,7 +309,7 @@ def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     k_pages, v_pages = pc.write_token(k_pages, v_pages, block_table, lengths,
-                                      k, v)
+                                      k, v, active=active)
     table = block_table if live_pages is None \
         else block_table[:, :live_pages]
     if cfg.use_pallas and T == 1 and not cfg.attn_logit_softcap:
@@ -367,6 +372,59 @@ def attention_prefill_chunk_paged(cfg: ModelConfig, params: dict, x: jax.Array,
     else:
         gk = pc.gather_sequence(k_pages, row[None])
         gv = pc.gather_sequence(v_pages, row[None])
+        Sc = gk.shape[1]
+        ki = jnp.arange(Sc)[None, None, :]
+        qpos = positions[:, :, None]
+        mask = (ki <= qpos)[:, None]
+        out = _grouped_sdpa(q, gk, gv, mask, cfg.q_per_kv,
+                            cfg.attn_logit_softcap)
+    dt = x.dtype
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+    return out, k_pages, v_pages
+
+
+def attention_prefill_ragged_paged(cfg: ModelConfig, params: dict,
+                                   x: jax.Array, k_pages: jax.Array,
+                                   v_pages: jax.Array, block_rows: jax.Array,
+                                   offsets: jax.Array, lens: jax.Array,
+                                   live_pages: Optional[int] = None
+                                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """R prompt chunks — one per ingesting slot — against a paged KV pool in
+    a single call (batched ragged ingest).
+
+    x: (R, C, D) — row r is slot r's next chunk, right-padded to `lens[r]`
+    valid tokens; block_rows: (R, P) the slots' block-table rows (pre-trimmed
+    to the shared live width); offsets: (R,) tokens already written per slot.
+    Writes every row's chunk K/V (`pc.write_prompt_ragged` — distinct slots
+    own distinct pages, so the scatter is collision-free), then attends each
+    row's queries causally within its chunk AND against everything that slot
+    already holds. Returns (out, k_pages, v_pages); row r positions past
+    lens[r] are unspecified, as are padding rows (lens == 0).
+
+    Numerics contract: both read paths are row-independent — the oracle is
+    the same gather + `_grouped_sdpa` formulation as the single-slot chunk
+    path (batching adds rows, never changes a row's reduction order), and the
+    ragged Pallas kernel walks each row's pages exactly as the single-slot
+    kernel does — so batched ingest is bitwise the one-chunk-per-step
+    scheduler, which is in turn bitwise monolithic prefill.
+    """
+    R, C, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x)
+    positions = offsets[:, None] + jnp.arange(C)[None, :]          # (R, C)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.models import paged_cache as pc
+    k_pages, v_pages = pc.write_prompt_ragged(k_pages, v_pages, block_rows,
+                                              k, v, lens, offsets)
+    rows = block_rows if live_pages is None else block_rows[:, :live_pages]
+    if cfg.use_pallas and not cfg.attn_logit_softcap:
+        from repro.kernels.paged_prefill_attention import ops as ppa_ops
+        out = ppa_ops.paged_prefill_attention_ragged(q, k_pages, v_pages,
+                                                     rows, offsets, lens)
+    else:
+        gk = pc.gather_sequence(k_pages, rows)         # (R, P*page, kv, hd)
+        gv = pc.gather_sequence(v_pages, rows)
         Sc = gk.shape[1]
         ki = jnp.arange(Sc)[None, None, :]
         qpos = positions[:, :, None]

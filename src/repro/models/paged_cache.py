@@ -48,11 +48,16 @@ def gather_sequence(pages: jax.Array, block_table: jax.Array) -> jax.Array:
 
 
 def write_token(pages_k: jax.Array, pages_v: jax.Array, block_table: jax.Array,
-                lengths: jax.Array, new_k: jax.Array, new_v: jax.Array
+                lengths: jax.Array, new_k: jax.Array, new_v: jax.Array,
+                active: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, jax.Array]:
     """Write one token per slot at its current length.
 
-    pages_*: (n_pages, page, kv, hd); new_*: (B, 1, kv, hd)."""
+    pages_*: (n_pages, page, kv, hd); new_*: (B, 1, kv, hd). `active` (B,)
+    bool, when given, drops inactive rows' writes entirely — the engine's
+    plan/run loop pushes freed rows' block-table clears lazily (at most one
+    table transfer per step), so a freed slot's stale row may still map
+    pages a COW sibling owns; masking here keeps those pages untouched."""
     n_pages, page_size = pages_k.shape[0], pages_k.shape[1]
     pos = lengths
     page_of = jnp.take_along_axis(block_table, (pos // page_size)[:, None],
@@ -61,6 +66,8 @@ def write_token(pages_k: jax.Array, pages_v: jax.Array, block_table: jax.Array,
     # unmapped (-1) rows route to index n_pages, which mode="drop" discards —
     # crucial for freed slots whose pages may now belong to another request
     safe_page = jnp.where(page_of < 0, n_pages, page_of)
+    if active is not None:
+        safe_page = jnp.where(active, safe_page, n_pages)
     pages_k = pages_k.at[safe_page, off].set(new_k[:, 0], mode="drop")
     pages_v = pages_v.at[safe_page, off].set(new_v[:, 0], mode="drop")
     return pages_k, pages_v
@@ -86,6 +93,35 @@ def write_prompt(pages_k: jax.Array, pages_v: jax.Array, block_row: jax.Array,
     off = pos % page_size
     pages_k = pages_k.at[safe_page, off].set(new_k[0], mode="drop")
     pages_v = pages_v.at[safe_page, off].set(new_v[0], mode="drop")
+    return pages_k, pages_v
+
+
+def write_prompt_ragged(pages_k: jax.Array, pages_v: jax.Array,
+                        block_rows: jax.Array, new_k: jax.Array,
+                        new_v: jax.Array, lens: jax.Array, offsets: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter R slots' prompt chunks into their pages in one shot.
+
+    The batched-ingest analogue of `write_prompt`: row r holds slot r's next
+    chunk, right-padded to C with `lens[r]` valid tokens, written at logical
+    positions offsets[r]..offsets[r]+lens[r]-1 through that slot's block-table
+    row. Distinct slots own distinct pages, so rows never collide and the
+    scatter is order-independent — row r's writes are bitwise what a
+    `write_prompt` call for that row alone would produce.
+
+    pages_*: (n_pages, page, kv, hd); block_rows: (R, P); new_*: (R, C, kv,
+    hd); lens/offsets: (R,). Padding rows (lens == 0) write nothing.
+    """
+    n_pages, page_size = pages_k.shape[0], pages_k.shape[1]
+    R, C = new_k.shape[0], new_k.shape[1]
+    pos = offsets[:, None] + jnp.arange(C)[None, :]            # (R, C)
+    page_of = jnp.take_along_axis(block_rows, pos // page_size, axis=1,
+                                  mode="clip")
+    valid = (jnp.arange(C)[None, :] < lens[:, None]) & (page_of >= 0)
+    safe_page = jnp.where(valid, page_of, n_pages)             # OOB dropped
+    off = pos % page_size
+    pages_k = pages_k.at[safe_page, off].set(new_k, mode="drop")
+    pages_v = pages_v.at[safe_page, off].set(new_v, mode="drop")
     return pages_k, pages_v
 
 

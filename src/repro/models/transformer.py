@@ -702,6 +702,84 @@ def prefill_chunk_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     return logits, new_cache
 
 
+def prefill_ragged_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                         cache: dict, slots, offsets, lens,
+                         live_pages: Optional[int] = None, mesh=None
+                         ) -> Tuple[jax.Array, dict]:
+    """Batched ragged chunk ingest: R slots' next prompt chunks in ONE call.
+
+    tokens: (R, C) — row r is slot `slots[r]`'s next chunk, right-padded to
+    `lens[r]` valid tokens starting at logical position `offsets[r]`; slots/
+    offsets/lens: (R,) int32. Padding rows (the engine buckets R) carry
+    slots[r] == batch (out of range): their cache scatters drop and their
+    block-table gathers clip to a live row whose results are discarded.
+    Each row's block-table entry must already map pages through
+    offsets[r] + lens[r] tokens. Returns (logits (R, V) at each row's last
+    valid chunk token, cache); padding rows' logits are unspecified.
+
+    This is the plan/run engine's one-device-call-per-step ingest
+    (flashinfer's BatchPrefillWithPagedKVCacheWrapper layout): the scheduler
+    plans (slot, offset, len) rows on the host, then every ingesting slot
+    advances together. Per-row numerics are bitwise the one-chunk-per-step
+    `prefill_chunk_paged` path — batching adds rows, never changes a row's
+    reduction order — which keeps chunked ingest bit-identical to monolithic
+    prefill. Same attention-only restriction as `prefill_chunk_paged`.
+    """
+    _check_paged_support(cfg)
+    assert all(kind in (ATTN, MOE, SHARED_ATTN)
+               for kind, _ in segments_of(cfg)), \
+        "chunked prefill supports attention-only stacks"
+    x = embed(cfg, params["embed"], tokens)
+    R, C, _ = x.shape
+    slots = jnp.asarray(slots, jnp.int32)
+    offsets = jnp.asarray(offsets, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    block_rows = jnp.take(cache["block_table"], slots, axis=0, mode="clip")
+    x = _constrain(cfg, mesh, x)
+
+    def block(x, blk, c, kind):
+        xin = norm(cfg, blk["norm1"], x)
+        h, nk, nv = attn_lib.attention_prefill_ragged_paged(
+            cfg, blk["attn"], xin, c["k_pages"], c["v_pages"], block_rows,
+            offsets, lens, live_pages=live_pages)
+        x = x + h
+        return _prefill_block_tail(cfg, kind, blk, x,
+                                   {"k_pages": nk, "v_pages": nv}, None, mesh)
+
+    new_segs = []
+    for (kind, count), seg, segc in zip(segments_of(cfg), params["segments"],
+                                        cache["segments"]):
+        if kind == SHARED_ATTN:
+            x, newc = block(x, params["shared"],
+                            jax.tree.map(lambda a: a[0], segc), kind)
+            newc = jax.tree.map(lambda a: a[None], newc)
+        else:
+            def scan_body(x, inp, kind=kind):
+                blk, c = inp
+                x = _constrain(cfg, mesh, x)
+                return block(x, blk, c, kind)
+            x, newc = _scan_or_unroll(cfg, scan_body, x, (seg, segc))
+        new_segs.append(newc)
+
+    x = norm(cfg, params["final_norm"], x)
+    idx = jnp.clip(lens - 1, 0, C - 1)
+    last_h = jax.vmap(lambda h, i: h[i])(x, idx)               # (R, D)
+    # per-row unembed via lax.map, NOT one (R, 1, D) einsum: XLA collapses
+    # the latter into an M=R GEMM whose accumulation can differ from the
+    # serial path's M=1 matvec by an ulp (opt-level dependent); mapping
+    # keeps every row the exact (1, 1, D) shape `prefill_chunk_paged`
+    # lowers, preserving the bitwise row-identity contract. R is small
+    # (bucketed batch rows) and only one row per request ever seeds a
+    # sample, so the serialization is negligible.
+    logits = jax.lax.map(
+        lambda h: unembed(cfg, params["embed"], h[None, None])[0, 0], last_h)
+    # padding rows target index `batch` and are dropped
+    lengths = cache["lengths"].at[slots].set(offsets + lens, mode="drop")
+    new_cache = {"lengths": lengths,
+                 "block_table": cache["block_table"], "segments": new_segs}
+    return logits, new_cache
+
+
 def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
                       cache: dict, mesh=None,
                       active: Optional[jax.Array] = None,
@@ -712,8 +790,9 @@ def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     Attention layers append the new token into their page pools through the
     block table and read either the Pallas paged flash-decode kernel
     (cfg.use_pallas) or the gather oracle; recurrent layers are identical
-    to the dense decode. `active` masks freed rows' length advance (their
-    block-table rows are -1, so their writes are already dropped).
+    to the dense decode. `active` masks freed rows' length advance AND their
+    K/V writes — the plan/run engine pushes block-table clears lazily, so a
+    freed row's stale table entry may still map a COW sibling's pages.
     `live_pages` (static) bounds the attention READ to the first live
     block-table columns — see attention_decode_paged.
     """
@@ -726,7 +805,8 @@ def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     def block(x, blk, c, kind):
         if kind in (ATTN, MOE, SHARED_ATTN):
             return _decode_block_paged(cfg, kind, blk, c, x, lengths, table,
-                                       mesh, live_pages=live_pages)
+                                       mesh, live_pages=live_pages,
+                                       active=active)
         return _decode_block(cfg, kind, blk, c, x, lengths, mesh)
 
     new_segs = []
@@ -786,11 +866,11 @@ def fork_slot_paged(cfg: ModelConfig, cache: dict, src_slot, dst_slot,
 
 def _decode_block_paged(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,
                         lengths, table, mesh=None,
-                        live_pages: Optional[int] = None):
+                        live_pages: Optional[int] = None, active=None):
     xin = norm(cfg, blk["norm1"], x)
     h, nk, nv = attn_lib.attention_decode_paged(
         cfg, blk["attn"], xin, c["k_pages"], c["v_pages"], table, lengths,
-        live_pages=live_pages)
+        live_pages=live_pages, active=active)
     x = x + h
     newc = {"k_pages": nk, "v_pages": nv}
     if kind == MOE:

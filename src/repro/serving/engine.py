@@ -11,10 +11,21 @@ Two KV backends (`kv_backend`):
       recompute instead of failing. Dense and paged are bit-identical on the
       same request stream (masked page garbage contributes exactly zero).
 
+The step loop is structured plan/run (flashinfer's plan/run split and vLLM's
+scheduler are the precedents): every host decision — page growth, eviction,
+ragged ingest layout, decode inputs — is planned with numpy, the block table
+is pushed to the device at most once per step, and the step dispatches at
+most one batched ragged chunk-ingest call plus one fused decode call
+(model step + sample + logprob in a single jit, cache donated) whose readback
+is deferred to the NEXT step's harvest. The host therefore plans step N+1
+while the device still runs step N, and per-step sync cost is one
+`jax.device_get`.
+
 This is the engine the examples and real-compute benchmarks run on CPU with
 tiny models; on TPU the same code serves the full configs (the dry-run proves
 the sharded lowering). Prompt lengths are bucketed to powers of two to bound
-jit recompilation.
+jit recompilation; `warmup()` precompiles the variants an arrival pattern
+will need so the first serving window is not dominated by XLA compiles.
 """
 from __future__ import annotations
 
@@ -94,8 +105,42 @@ def _prefill_chunk_fn(cfg, live_pages, params, tokens, cache, slot, offset,
                                            live_pages=live_pages)
 
 
+def _prefill_ragged_fn(cfg, live_pages, params, tokens, cache, slots, offsets,
+                       lens):
+    return transformer.prefill_ragged_paged(cfg, params, tokens, cache, slots,
+                                            offsets, lens,
+                                            live_pages=live_pages)
+
+
+# The "run" half of the plan/run decode step: model step + PRNG split +
+# sample + logprob fused into ONE dispatch, returning device arrays the
+# engine reads back a full step later (deferred harvest). The split/sample
+# sequence is written exactly as the eager path ran it, so fused and eager
+# draws are bitwise identical.
+
+def _decode_dense_run_fn(cfg, sampler, params, tokens, cache, active, key):
+    logits, cache = transformer.decode_step(cfg, params, tokens, cache,
+                                            active=active)
+    key, sub = jax.random.split(key)
+    toks = sample(logits, sub, sampler)
+    lps = token_logprob(logits, toks)
+    return toks, lps, key, cache
+
+
+def _decode_paged_run_fn(cfg, sampler, live_pages, params, tokens, cache,
+                         active, key):
+    logits, cache = transformer.decode_step_paged(cfg, params, tokens, cache,
+                                                  active=active,
+                                                  live_pages=live_pages)
+    key, sub = jax.random.split(key)
+    toks = sample(logits, sub, sampler)
+    lps = token_logprob(logits, toks)
+    return toks, lps, key, cache
+
+
 @functools.lru_cache(maxsize=None)
-def _jitted(cfg: ModelConfig, kind: str):
+def _jitted(cfg: ModelConfig, kind: str,
+            sampler: Optional[SamplerConfig] = None):
     if kind == "decode":
         return jax.jit(functools.partial(_decode_dense_fn, cfg))
     if kind == "decode_paged":
@@ -103,6 +148,14 @@ def _jitted(cfg: ModelConfig, kind: str):
         # buckets it to powers of two, so recompiles are bounded by
         # log2(max_pages_per_seq) variants per config
         return jax.jit(functools.partial(_decode_paged_fn, cfg),
+                       static_argnums=(0,), donate_argnums=(3,))
+    if kind == "decode_run":
+        # SamplerConfig is frozen/hashable, so the fused variants share the
+        # lru_cache exactly like cfg does
+        return jax.jit(functools.partial(_decode_dense_run_fn, cfg, sampler),
+                       donate_argnums=(2,))
+    if kind == "decode_paged_run":
+        return jax.jit(functools.partial(_decode_paged_run_fn, cfg, sampler),
                        static_argnums=(0,), donate_argnums=(3,))
     if kind == "prefill":
         return jax.jit(functools.partial(_prefill_dense_fn, cfg))
@@ -115,6 +168,12 @@ def _jitted(cfg: ModelConfig, kind: str):
         # chunked engines compile one chunk variant per live-width bucket
         # instead of one prefill per prompt-length bucket
         return jax.jit(functools.partial(_prefill_chunk_fn, cfg),
+                       static_argnums=(0,), donate_argnums=(3,))
+    if kind == "prefill_ragged":
+        # batched ragged ingest: one call advances EVERY ingesting slot's
+        # next chunk; row count is bucketed to powers of two (lo=1), so
+        # variants are bounded by log2(max_batch) x log2(live widths)
+        return jax.jit(functools.partial(_prefill_ragged_fn, cfg),
                        static_argnums=(0,), donate_argnums=(3,))
     if kind == "fork":
         return jax.jit(functools.partial(transformer.fork_slot_paged, cfg),
@@ -152,6 +211,25 @@ class Slot:
     # PICE maps cloud-sketch / SLA-bound work above opportunistic
     # ensemble expansions
     priority: int = 0
+    # the admitted prompt was longer than max_len and kept only its tail
+    # (surfaced so callers can tell a truncated completion from a full one;
+    # eviction-resume replays the same truncation deterministically)
+    truncated: bool = False
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Host-side decode plan: every decision one decode step needs, computed
+    with numpy only (the "plan" half of the plan/run split — flashinfer's
+    plan/run and vLLM's scheduler are the precedents). Token-independent
+    state (ctx_len advance, pending-suffix pops) is applied AT PLAN TIME;
+    only the sampled token's commit waits for the deferred harvest, so the
+    host can plan step N+1 while the device still runs step N."""
+    active_ids: List[int]           # slots in this decode batch
+    last: np.ndarray                # (B, 1) int32 decode inputs
+    mask: np.ndarray                # (B,) bool active-row mask
+    live: int                       # paged: static live-width bucket (0=dense)
+    commits: List[int]              # slots whose sampled token commits later
 
 
 @dataclasses.dataclass
@@ -177,7 +255,8 @@ class InferenceEngine:
                  max_len: int = 1024, sampler: SamplerConfig = SamplerConfig(),
                  eos_id: int = 0, name: str = "engine",
                  kv_backend: str = "dense", page_size: int = 32,
-                 n_pages: Optional[int] = None, prefix_sharing: bool = True):
+                 n_pages: Optional[int] = None, prefix_sharing: bool = True,
+                 ragged_ingest: bool = True):
         assert kv_backend in ("dense", "paged"), kv_backend
         self.cfg = cfg
         self.params = params
@@ -192,6 +271,9 @@ class InferenceEngine:
         # level (the fork path's teacher-forced suffixes are a different —
         # equally valid — float reduction order than one monolithic prefill)
         self.prefix_sharing = prefix_sharing
+        # escape hatch: ragged_ingest=False keeps the legacy one-chunk-per-
+        # step ingest scheduler (A/B reference for the batched ragged path)
+        self.ragged_ingest = ragged_ingest
         self.slots = [Slot() for _ in range(max_batch)]
         self.key = jax.random.PRNGKey(0)
         self.tokens_generated = 0
@@ -208,8 +290,20 @@ class InferenceEngine:
         # eviction/resume (TTFT spans the preemption), recorded once at the
         # first committed token; benchmarks read + clear `ttft`
         self._t_admit: Dict[int, float] = {}
+        self._admit_stamp_cap = 4096
+        # req_ids a _run loop is still driving: their admission stamps must
+        # never be pruned even while they sit evicted in the resume queue
+        self._inflight: set = set()
         self.ttft: Dict[int, float] = {}
+        # req_id -> prompt tokens dropped at admission (prompt > max_len);
+        # the matching Slot carries `truncated` while it lives
+        self.truncations: Dict[int, int] = {}
         self.prefill_chunk = 0
+        # deferred harvest: (commit slots, device toks, device lps) of the
+        # decode step dispatched last step(), read back at the next step()
+        self._pending_decode: Optional[Tuple[List[int], jax.Array,
+                                             jax.Array]] = None
+        self._table_dirty = False
 
         if kv_backend == "paged":
             cfg.validate_paged(page_size, max_len)
@@ -223,7 +317,7 @@ class InferenceEngine:
             self.cache = transformer.init_paged_cache(
                 cfg, max_batch, self.n_pages, page_size, self.pages_per_seq)
             self._push_table()
-            self._decode = _jitted(cfg, "decode_paged")
+            self._decode_run = _jitted(cfg, "decode_paged_run", sampler)
             self._prefill_paged = _jitted(cfg, "prefill_paged")
             self._fork = _jitted(cfg, "fork")
             # chunked prefill needs an attention-only stack (recurrent
@@ -235,9 +329,10 @@ class InferenceEngine:
             self.prefill_chunk = cfg.prefill_chunk if chunkable else 0
             if self.prefill_chunk:
                 self._prefill_chunk = _jitted(cfg, "prefill_chunk")
+                self._prefill_ragged = _jitted(cfg, "prefill_ragged")
         else:
             self.cache = transformer.init_cache(cfg, max_batch, max_len)
-            self._decode = _jitted(cfg, "decode")
+            self._decode_run = _jitted(cfg, "decode_run", sampler)
             self._prefill = _jitted(cfg, "prefill")
             self._insert = _jitted(cfg, "insert")
         self._score = _jitted(cfg, "score")
@@ -247,6 +342,19 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     def _push_table(self):
         self.cache["block_table"] = jnp.asarray(self.block_table)
+        self._table_dirty = False
+
+    def _mark_table_dirty(self):
+        """Host block-table edits are batched: step() pushes the table to
+        the device at most ONCE per step (`_sync_table`), right before the
+        first dispatch that reads it. Deferring a freed slot's row clear is
+        safe because decode writes are active-masked (see pc.write_token)
+        and masked rows' reads are discarded."""
+        self._table_dirty = True
+
+    def _sync_table(self):
+        if self._table_dirty:
+            self._push_table()
 
     def _occupancy(self) -> Tuple[int, int, int]:
         """(physical, shared, logical) occupancy right now. Dense slots are
@@ -285,7 +393,7 @@ class InferenceEngine:
     def _release_slot_pages(self, slot: int):
         self.alloc.release(slot)
         self.block_table[slot, :] = -1
-        self._push_table()
+        self._mark_table_dirty()
 
     def _evict_victim(self, protect: int) -> bool:
         """Preempt one active slot other than `protect`: the lowest-priority
@@ -389,7 +497,7 @@ class InferenceEngine:
         self._track_peak()
         self.block_table[slot, :] = -1
         self.block_table[slot, :len(pages)] = pages
-        self._push_table()
+        self._mark_table_dirty()
 
     def _chunk_live(self, end: int) -> int:
         """Static covering read width through position `end`, bucketed to
@@ -408,6 +516,7 @@ class InferenceEngine:
         padded = np.zeros((1, self.prefill_chunk), np.int32)
         padded[0, :len(chunk)] = chunk
         live = self._chunk_live(offset + len(chunk))
+        self._sync_table()
         logits, self.cache = self._prefill_chunk(
             live, self.params, jnp.asarray(padded), self.cache,
             jnp.asarray(slot, jnp.int32), jnp.asarray(offset, jnp.int32),
@@ -451,6 +560,7 @@ class InferenceEngine:
             self._alloc_slot_pages(slot, len(toks))
             if self.prefill_chunk:
                 return self._prefill_into_chunks(slot, toks)
+            self._sync_table()
             logits, self.cache = self._prefill_paged(
                 self.params, jnp.asarray(padded), self.cache,
                 jnp.asarray(slot, jnp.int32),
@@ -465,11 +575,16 @@ class InferenceEngine:
 
     @staticmethod
     def _pad_prompt(full_prompt: List[int], max_len: int):
+        """Bucket-pad a prompt, keeping the TAIL when it exceeds max_len
+        (generation conditions on the most recent context). Returns
+        (kept_tokens, padded, dropped) — `dropped` > 0 surfaces the
+        truncation instead of silently shortening the prompt; callers
+        record it so an eviction-resume replays the identical truncation."""
         S = min(_bucket(len(full_prompt)), max_len)
         padded = np.zeros((1, S), np.int32)
         toks = full_prompt[-S:]
         padded[0, :len(toks)] = toks
-        return toks, padded
+        return toks, padded, len(full_prompt) - len(toks)
 
     # ------------------------------------------------------------------
     # Prefix sharing (PICE sketch fan-out): prefill the shared (query,
@@ -491,7 +606,7 @@ class InferenceEngine:
         # and therefore sampled outputs — bit-identical to the unshared path
         slot = free[-1]
         t0 = time.perf_counter()
-        toks, padded = self._pad_prompt(list(prefix), self.max_len)
+        toks, padded, _ = self._pad_prompt(list(prefix), self.max_len)
         logits = self._prefill_into(slot, toks, padded)
         s = self.slots[slot]
         s.req_id, s.active, s.parked = -1, False, True
@@ -550,9 +665,9 @@ class InferenceEngine:
         slot = free[0]
         t0 = time.perf_counter()
         self._t_admit.setdefault(req_id, t0)
-        while len(self._t_admit) > 4096:     # bound never-committed leftovers
-            self._t_admit.pop(next(iter(self._t_admit)))
+        self._prune_admit_stamps()
 
+        dropped = 0
         ingest: List[int] = []          # chunked path: tokens step() feeds
         logits = None
         if share_from is not None:
@@ -563,7 +678,7 @@ class InferenceEngine:
             self._track_peak()
             self.block_table[slot, :] = -1
             self.block_table[slot, :len(dst_pages)] = dst_pages
-            self._push_table()
+            self._mark_table_dirty()
             self.cache = self._fork(
                 self.cache, jnp.asarray(share_from, jnp.int32),
                 jnp.asarray(slot, jnp.int32),
@@ -583,12 +698,13 @@ class InferenceEngine:
                         * self.page_size)
                     self.block_table[slot,
                                      len(self.alloc.owned[slot]) - 1] = p
-                self._push_table()
+                self._mark_table_dirty()
                 self._track_peak()
                 ingest, pending = pending, []
         elif self.prefill_chunk:
             full = list(prompt) + carry_tokens
             toks = full[-self.max_len:]
+            dropped = len(full) - len(toks)
             self._alloc_slot_pages(slot, len(toks))
             ctx, pending, ingest = 0, [], list(toks)
             if not toks:
@@ -597,8 +713,8 @@ class InferenceEngine:
                 # likewise prefills a zero-padded buffer and samples)
                 logits = self._prefill_into_chunks(slot, toks)
         else:
-            toks, padded = self._pad_prompt(list(prompt) + carry_tokens,
-                                            self.max_len)
+            toks, padded, dropped = self._pad_prompt(
+                list(prompt) + carry_tokens, self.max_len)
             logits = self._prefill_into(slot, toks, padded)
             ctx = len(toks)
             pending = []
@@ -615,6 +731,11 @@ class InferenceEngine:
         s.suffix = suffix if share_from is not None else []
         s.evicted = False
         s.priority = priority
+        s.truncated = dropped > 0
+        if dropped:
+            self.truncations[req_id] = dropped
+            while len(self.truncations) > self._admit_stamp_cap:
+                self.truncations.pop(next(iter(self.truncations)))
         s.arrival = self._arrivals
         self._arrivals += 1
         self._track_peak()
@@ -628,6 +749,24 @@ class InferenceEngine:
         # is ingested
         self.busy_s += time.perf_counter() - t0
         return slot
+
+    def _prune_admit_stamps(self):
+        """Bound `_t_admit` without losing live requests' TTFT: only stamps
+        with NO remaining reference — no active/ingesting slot, nothing in
+        the resume queue, nothing a _run loop still drives — are evictable.
+        (The old cap popped the OLDEST stamp, which under churn was exactly
+        a preempted or still-queued request whose TTFT then silently never
+        got recorded.)"""
+        if len(self._t_admit) <= self._admit_stamp_cap:
+            return
+        live = {s.req_id for s in self.slots if s.active}
+        live |= {r.req_id for r in self._resume_queue}
+        live |= self._inflight
+        for rid in list(self._t_admit):
+            if len(self._t_admit) <= self._admit_stamp_cap:
+                break
+            if rid not in live:
+                self._t_admit.pop(rid)
 
     def _commit(self, slot: int, tok: int, lp: float):
         s = self.slots[slot]
@@ -690,31 +829,160 @@ class InferenceEngine:
                 changed = True
                 self._track_peak()
         if changed:
-            self._push_table()
+            self._mark_table_dirty()
+
+    def _harvest(self) -> bool:
+        """Read back and commit the decode step dispatched LAST step(). One
+        `jax.device_get` on the whole (toks, lps) pair replaces the per-slot
+        scalar syncs the old loop paid — and because the read happens a full
+        step after the dispatch, the host's planning for step N+1 overlapped
+        the device's work on step N."""
+        if self._pending_decode is None:
+            return False
+        commits, toks_d, lps_d = self._pending_decode
+        self._pending_decode = None
+        t0 = time.perf_counter()
+        toks, lps = jax.device_get((toks_d, lps_d))
+        for i in commits:
+            # in-engine nothing deactivates a slot between dispatch and
+            # harvest; the guard covers direct _evict_victim calls (tests)
+            if self.slots[i].active:
+                self._commit(i, int(toks[i]), float(lps[i]))
+        self.busy_s += time.perf_counter() - t0
+        return True
+
+    def _plan_decode(self, active_ids: List[int]) -> StepPlan:
+        """Build this step's decode plan with numpy only. Token-independent
+        slot state advances here (ctx_len, pending-suffix pops) — the
+        values the eventual `_commit` termination checks read are exactly
+        what the old inline loop saw; only the sampled token itself arrives
+        later, at harvest."""
+        last = np.zeros((self.max_batch, 1), np.int32)
+        mask = np.zeros((self.max_batch,), bool)
+        mask[active_ids] = True
+        live = self._live_pages(active_ids) \
+            if self.kv_backend == "paged" else 0
+        commits: List[int] = []
+        for i in active_ids:
+            s = self.slots[i]
+            if s.pending:
+                last[i, 0] = s.pending[0]
+            elif s.tokens:
+                last[i, 0] = s.tokens[-1]
+            s.ctx_len = min(s.ctx_len + 1, self.max_len)
+            if s.pending:
+                s.pending.pop(0)
+                if s.pending:
+                    continue            # still teacher-forcing the suffix
+            commits.append(i)
+        return StepPlan(active_ids=active_ids, last=last, mask=mask,
+                        live=live, commits=commits)
+
+    def _dispatch_decode(self, plan: StepPlan):
+        """The "run" half: ONE fused device call (decode + split + sample +
+        logprob), cache donated, readback deferred to the next step's
+        harvest. The PRNG key chains through the device so no sync is
+        needed to keep `self.key`'s split stream identical to the eager
+        loop's."""
+        if self.kv_backend == "paged":
+            toks, lps, self.key, self.cache = self._decode_run(
+                plan.live, self.params, jnp.asarray(plan.last), self.cache,
+                jnp.asarray(plan.mask), self.key)
+        else:
+            toks, lps, self.key, self.cache = self._decode_run(
+                self.params, jnp.asarray(plan.last), self.cache,
+                jnp.asarray(plan.mask), self.key)
+        self._pending_decode = (plan.commits, toks, lps)
+
+    def _run_ingest(self) -> bool:
+        """Batched ragged chunk ingest: EVERY ingesting slot's next chunk in
+        one `prefill_ragged_paged` dispatch (qo_indptr-style rows of
+        (slot, offset, len)), instead of one slot per step. Slots whose
+        final chunk lands here draw their first token eagerly — same split
+        order as the serial scheduler — and join the decode batch next
+        step."""
+        ing = [i for i, s in enumerate(self.slots)
+               if s.active and s.prefill_toks]
+        if not ing:
+            return False
+        # finish draws happen in this order; it matches the serial
+        # scheduler's pick order (priority first, then admission age), so
+        # aligned sampled streams stay aligned
+        ing.sort(key=lambda j: (-self.slots[j].priority,
+                                self.slots[j].arrival))
+        C = self.prefill_chunk
+        rows: List[Tuple[int, int, List[int]]] = []
+        for i in ing:
+            s = self.slots[i]
+            chunk = s.prefill_toks[:C]
+            s.prefill_toks = s.prefill_toks[C:]
+            rows.append((i, s.ctx_len, chunk))
+            s.ctx_len += len(chunk)
+        R = 1
+        while R < len(rows):
+            R *= 2                      # bucket rows (lo=1) to bound variants
+        toks = np.zeros((R, C), np.int32)
+        # padding rows carry the out-of-range slot `max_batch`: their cache
+        # scatters drop and their gathers clip to a live row and are
+        # discarded
+        slots = np.full((R,), self.max_batch, np.int32)
+        offs = np.zeros((R,), np.int32)
+        lens = np.zeros((R,), np.int32)
+        for r, (i, off, chunk) in enumerate(rows):
+            toks[r, :len(chunk)] = chunk
+            slots[r], offs[r], lens[r] = i, off, len(chunk)
+        live = self._chunk_live(max(off + len(chunk)
+                                    for _, off, chunk in rows))
+        logits, self.cache = self._prefill_ragged(
+            live, self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(slots), jnp.asarray(offs), jnp.asarray(lens))
+        for r, (i, _, _) in enumerate(rows):
+            s = self.slots[i]
+            if s.active and not s.prefill_toks:
+                # final chunk landed: first token — the same (1, V) sample a
+                # monolithic add_request takes (row slices of the batched
+                # logits are bitwise the single-slot logits)
+                self.key, sub = jax.random.split(self.key)
+                tok = sample(logits[r:r + 1], sub, self.sampler)
+                lp = token_logprob(logits[r:r + 1], tok)
+                self._commit(i, int(tok[0]), float(lp[0]))
+        return True
 
     def step(self) -> bool:
-        """One engine step: ingest at most one prompt chunk (chunked
-        prefill), then one decode step for every decodable slot. Returns
-        True if work was done.
+        """One engine step, structured plan/run: (0) harvest last step's
+        decode readback, (1) host-plan everything — page growth/COW,
+        eviction, ragged ingest rows, decode inputs — with numpy, (2) push
+        the block table at most once, (3) dispatch at most one batched
+        ragged ingest call and one fused decode call, deferring the decode
+        readback to the next step. Returns True if work was done (including
+        a harvest-only step that drains the last in-flight decode).
 
-        The chunk goes to the oldest admission still ingesting, so decode
-        latency between steps is bounded by one chunk of prefill compute —
-        a long prompt no longer head-of-line-blocks the whole batch for its
-        full monolithic prefill. Slots finish ingesting and join the decode
-        batch in the same step their final chunk lands (mirroring the
-        monolithic path, where `add_request` samples and the next `step`
-        decodes).
+        Batched ingest (`ragged_ingest`, default): every ingesting slot
+        advances one chunk per step through a single ragged device call, so
+        decode latency between steps stays bounded by one chunk of prefill
+        compute and a long prompt still cannot head-of-line-block the batch.
+        Slots whose final chunk lands this step sample their first token
+        eagerly (TTFT semantics unchanged) and join the decode batch next
+        step; with `ragged_ingest=False` the legacy one-chunk-per-step
+        scheduler runs instead, with its same-step join. Either way the
+        ORDER of PRNG draws (finish draws, then the decode split) is
+        unchanged, so greedy outputs and aligned sampled streams match the
+        old loop bitwise.
 
         Slots with a pending suffix (fork path, monolithic engines) are
         teacher-forced: the step feeds `pending[0]` instead of the last
         sampled token and the sampled output is discarded until the suffix
         is exhausted — the logits after the final suffix token seed the
         first real sample."""
+        worked = self._harvest()
         if not any(s.active for s in self.slots):
-            return False
+            return worked
         t0 = time.perf_counter()
-        worked = False
-        if self.prefill_chunk:
+        batched = self.prefill_chunk and self.ragged_ingest \
+            and self.kv_backend == "paged"
+        if not batched and self.prefill_chunk:
+            # legacy scheduler: one chunk for the most urgent ingesting
+            # slot, which joins the decode batch this same step
             pref = [i for i, s in enumerate(self.slots)
                     if s.active and s.prefill_toks]
             if pref:
@@ -727,45 +995,104 @@ class InferenceEngine:
                 worked = True
         active = [i for i, s in enumerate(self.slots)
                   if s.active and not s.prefill_toks]
-        if not active:
-            self.busy_s += time.perf_counter() - t0
-            return worked
-        if self.kv_backend == "paged":
-            self._grow_pages()
+        if self.kv_backend == "paged" and active:
+            self._grow_pages()          # may evict, incl. mid-ingest slots
             active = [i for i, s in enumerate(self.slots)
                       if s.active and not s.prefill_toks]
-            if not active:
-                self.busy_s += time.perf_counter() - t0
-                return worked
+        plan = self._plan_decode(active) if active else None
+        if self.kv_backend == "paged":
+            # ONE table push per step, before the first dispatch that reads
+            # it. Finish commits below may free rows again; those stale
+            # entries ride until the next step's push — decode writes are
+            # active-masked, so they cannot touch a COW sibling's pages.
+            self._sync_table()
+        if batched:
+            worked = self._run_ingest() or worked
+        if plan is not None:
+            self._dispatch_decode(plan)
+            worked = True
+        self.busy_s += time.perf_counter() - t0
+        return worked
+
+    def warmup(self, *, max_context: Optional[int] = None,
+               prompt_lens: Tuple[int, ...] = (),
+               ingest_rows: Tuple[int, ...] = (1,)) -> int:
+        """Precompile the step loop's jit variants on an IDLE engine so the
+        first serving window is not dominated by XLA compiles (the paged
+        backend's per-live-width variants otherwise all compile inside the
+        measured window). Returns the number of variant dispatches made.
+
+        max_context bounds the decode live-width buckets to warm (default
+        max_len); prompt_lens warms monolithic prefill buckets (dense and
+        non-chunked paged engines); ingest_rows warms batched ragged ingest
+        row-bucket variants (chunked paged engines). All warm dispatches
+        are state no-ops: all-inactive masks and out-of-range slot rows
+        drop every write, and `self.key` is never advanced."""
+        assert not any(s.active or s.parked for s in self.slots), \
+            "warmup requires an idle engine"
+        key0 = jax.random.PRNGKey(0)    # throwaway: self.key stays untouched
+        count = 0
         last = np.zeros((self.max_batch, 1), np.int32)
         mask = np.zeros((self.max_batch,), bool)
-        mask[active] = True
-        for i in active:
-            s = self.slots[i]
-            if s.pending:
-                last[i, 0] = s.pending[0]
-            elif s.tokens:
-                last[i, 0] = s.tokens[-1]
         if self.kv_backend == "paged":
-            logits, self.cache = self._decode(
-                self._live_pages(active), self.params, jnp.asarray(last),
-                self.cache, jnp.asarray(mask))
+            lives = sorted({self._chunk_live(end) for end in
+                            range(1, min(max_context or self.max_len,
+                                         self.max_len) + 1)})
+            for live in lives:
+                _, _, _, self.cache = self._decode_run(
+                    live, self.params, jnp.asarray(last), self.cache,
+                    jnp.asarray(mask), key0)
+                count += 1
+            if self.prefill_chunk and self.ragged_ingest:
+                rbs = set()
+                for n in ingest_rows:
+                    r = 1
+                    while r < min(n, self.max_batch):
+                        r *= 2
+                    rbs.add(r)
+                sent = np.full((max(rbs),), self.max_batch, np.int32)
+                for rb in sorted(rbs):
+                    for live in lives:
+                        _, self.cache = self._prefill_ragged(
+                            live, self.params,
+                            jnp.zeros((rb, self.prefill_chunk), jnp.int32),
+                            self.cache, jnp.asarray(sent[:rb]),
+                            jnp.zeros((rb,), jnp.int32),
+                            jnp.zeros((rb,), jnp.int32))
+                        count += 1
+            elif self.prefill_chunk:
+                # serial fallback scheduler: warm the single-slot chunk
+                # variants instead (zero-length chunk: every write drops)
+                for live in lives:
+                    _, self.cache = self._prefill_chunk(
+                        live, self.params,
+                        jnp.zeros((1, self.prefill_chunk), jnp.int32),
+                        self.cache, jnp.asarray(0, jnp.int32),
+                        jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
+                    count += 1
+            elif prompt_lens:
+                for S in sorted({min(_bucket(n), self.max_len)
+                                 for n in prompt_lens}):
+                    self._sync_table()
+                    _, self.cache = self._prefill_paged(
+                        self.params, jnp.zeros((1, S), jnp.int32),
+                        self.cache, jnp.asarray(0, jnp.int32),
+                        jnp.asarray(0, jnp.int32))
+                    count += 1
         else:
-            logits, self.cache = self._decode(self.params, jnp.asarray(last),
-                                              self.cache, jnp.asarray(mask))
-        self.key, sub = jax.random.split(self.key)
-        toks = np.asarray(sample(logits, sub, self.sampler))
-        lps = np.asarray(token_logprob(logits, jnp.asarray(toks)))
-        for i in active:
-            s = self.slots[i]
-            s.ctx_len = min(s.ctx_len + 1, self.max_len)
-            if s.pending:
-                s.pending.pop(0)
-                if s.pending:
-                    continue            # still teacher-forcing the suffix
-            self._commit(i, int(toks[i]), float(lps[i]))
-        self.busy_s += time.perf_counter() - t0
-        return True
+            _, _, _, self.cache = self._decode_run(
+                self.params, jnp.asarray(last), self.cache,
+                jnp.asarray(mask), key0)
+            count += 1
+            for S in sorted({min(_bucket(n), self.max_len)
+                             for n in prompt_lens}):
+                one = transformer.init_cache(self.cfg, 1, self.max_len)
+                _, one = self._prefill(self.params,
+                                       jnp.zeros((1, S), jnp.int32), one,
+                                       jnp.asarray([0], jnp.int32))
+                self.cache = self._insert(self.cache, one, 0)
+                count += 1
+        return count
 
     # ------------------------------------------------------------------
     def generate(self, prompts: List[List[int]], max_new: int = 128,
@@ -817,6 +1144,17 @@ class InferenceEngine:
             # from an earlier run that reused the same req_id (eviction
             # resumes within THIS run still keep their original stamp)
             self._t_admit.pop(r.req_id, None)
+        # register this run's req_ids so admission-stamp pruning never drops
+        # a TTFT stamp for work that is merely queued or evicted-and-waiting
+        mine = {r.req_id for r in pending}
+        self._inflight |= mine
+        try:
+            return self._run_inner(pending, n)
+        finally:
+            self._inflight -= mine
+
+    def _run_inner(self, pending: List[_Resume], n: int
+                   ) -> List[Tuple[List[int], List[float]]]:
         results: Dict[int, Tuple[List[int], List[float]]] = {}
         submitted: Dict[int, int] = {}          # req_id -> slot
         while pending or any(s.active for s in self.slots):
@@ -860,10 +1198,16 @@ class InferenceEngine:
         return [results[i] for i in range(n)]
 
     def score(self, tokens: List[int]) -> Tuple[float, np.ndarray]:
-        """Mean token logprob of a sequence under this model (perplexity)."""
-        S = _bucket(len(tokens))
+        """Mean token logprob of a sequence under this model (perplexity).
+
+        The scoring buffer is clamped to max_len: the unbounded power-of-two
+        bucket used to compile (and OOM) arbitrarily large variants for one
+        long input. Sequences beyond max_len are scored on their TAIL — the
+        same most-recent-context convention `_pad_prompt` applies."""
+        S = min(_bucket(len(tokens)), self.max_len)
+        toks = tokens[-S:]
         arr = np.full((S,), self.eos_id, np.int32)
-        arr[:len(tokens)] = tokens
+        arr[:len(toks)] = toks
         mean_lp, gold = self._score(self.params, jnp.asarray(arr))
-        gold = np.asarray(gold)[:max(len(tokens) - 1, 1)]
+        gold = np.asarray(gold)[:max(len(toks) - 1, 1)]
         return float(np.mean(gold)), gold

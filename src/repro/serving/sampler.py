@@ -27,12 +27,21 @@ def sample(logits: jax.Array, key: jax.Array, cfg: SamplerConfig) -> jax.Array:
         kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     if cfg.top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        # Rank-based nucleus: keep exactly the first k sorted tokens, where
+        # k is the smallest count whose cumulative mass reaches top_p. A
+        # value-based cutoff (`logits < cutoff`) keeps EVERY token tied with
+        # the boundary logit, silently widening the nucleus — with a
+        # many-way tie that degenerates toward full-vocab sampling. Ranks
+        # come from inverting the descending sort permutation; `flip` of the
+        # ascending argsort (not argsort of the negation) keeps masked -inf
+        # entries ranked last.
+        order = jnp.flip(jnp.argsort(logits, axis=-1), axis=-1)
+        ranks = jnp.argsort(order, axis=-1)
+        sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
         probs = jax.nn.softmax(sorted_logits, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
-        cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1)
-        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+        k = jnp.sum(cum < cfg.top_p, axis=-1) + 1
+        logits = jnp.where(ranks < k[:, None], logits, -jnp.inf)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 

@@ -94,6 +94,81 @@ def _check_topp_support(p: float, seed: int):
         assert logits[b, t] >= cutoff
 
 
+def _nucleus_size(p: float, logits: np.ndarray) -> int:
+    """Smallest k whose top-k cumulative mass reaches p."""
+    srt = np.sort(logits)[::-1]
+    probs = np.exp(srt - srt.max())
+    probs /= probs.sum()
+    return int((np.cumsum(probs) < p).sum()) + 1
+
+
+def _check_topp_tied(p: float, n_tied: int, seed: int):
+    """A many-way tie AT the nucleus boundary must not widen the nucleus:
+    the value-based cutoff (`logits < cutoff`) kept every tied token —
+    with an all-tied vocab that degenerated to full-vocab sampling under
+    any top_p. Exactly the first k ranked tokens may be drawn."""
+    rng = np.random.default_rng(seed)
+    logits = np.full((1, V), 1.0, np.float32)
+    untied = rng.permutation(V)[:V - n_tied]
+    logits[0, untied] += rng.uniform(0.5, 3.0, len(untied)).astype(np.float32)
+    k = _nucleus_size(p, logits[0])
+    cfg = SamplerConfig(temperature=1.0, top_p=p)
+    # the kept set under rank masking: the k highest-ranked tokens (ties
+    # broken deterministically); every draw must land at or above the k-th
+    # sorted VALUE, and across many draws the nucleus must hold exactly k
+    # distinct tokens, not k + (extra tied copies)
+    seen = set()
+    for i in range(64):
+        t = int(np.asarray(sample(jnp.asarray(logits),
+                                  jax.random.PRNGKey(seed * 131 + i),
+                                  cfg))[0])
+        seen.add(t)
+        assert logits[0, t] >= np.sort(logits[0])[::-1][k - 1]
+    assert len(seen) <= k, \
+        f"nucleus widened by boundary ties: {len(seen)} tokens drawn, k={k}"
+
+
+def test_topp_all_tied_is_not_full_vocab():
+    """The degenerate case of the old cutoff: a uniform vocab made every
+    token 'tied with the boundary' so top_p never truncated anything."""
+    logits = jnp.zeros((2, V), jnp.float32)
+    cfg = SamplerConfig(temperature=1.0, top_p=0.3)
+    k = _nucleus_size(0.3, np.zeros(V))          # ceil(0.3 * V) ranks
+    seen = set()
+    for i in range(128):
+        toks = np.asarray(sample(logits, jax.random.PRNGKey(i), cfg))
+        seen.update(toks.tolist())
+    assert len(seen) <= k, \
+        f"uniform logits: drew {len(seen)} distinct tokens, nucleus is {k}"
+
+
+def test_topp_untied_unchanged_by_rank_masking():
+    """With no boundary ties the rank nucleus IS the value nucleus: the fix
+    must not change which tokens survive for generic logits."""
+    for seed in range(8):
+        logits = np.asarray(_logits(seed, B=1))
+        k = _nucleus_size(0.7, logits[0])
+        masked = logits[0] >= np.sort(logits[0])[::-1][k - 1]
+        for i in range(32):
+            t = int(np.asarray(sample(
+                jnp.asarray(logits), jax.random.PRNGKey(seed * 977 + i),
+                SamplerConfig(temperature=1.0, top_p=0.7)))[0])
+            assert masked[t]
+
+
+def test_topp_ties_below_boundary_survive():
+    """Ties strictly INSIDE the nucleus are untouched: rank masking only
+    trims at the boundary."""
+    logits = np.array([[5.0, 5.0, -10.0, -10.0, -10.0, -10.0, -10.0,
+                        -10.0, -10.0, -10.0, -10.0]], np.float32)
+    cfg = SamplerConfig(temperature=1.0, top_p=0.9)
+    seen = set()
+    for i in range(64):
+        seen.add(int(np.asarray(sample(jnp.asarray(logits),
+                                       jax.random.PRNGKey(i), cfg))[0]))
+    assert seen == {0, 1}
+
+
 if HAVE_HYPOTHESIS:
     @given(st.integers(min_value=1, max_value=2 * V),
            st.integers(min_value=0, max_value=50))
@@ -106,6 +181,13 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=25, deadline=None)
     def test_topp_support(p, seed):
         _check_topp_support(p, seed)
+
+    @given(st.floats(min_value=0.1, max_value=0.95),
+           st.integers(min_value=2, max_value=V),
+           st.integers(min_value=0, max_value=50))
+    @settings(max_examples=25, deadline=None)
+    def test_topp_tied(p, n_tied, seed):
+        _check_topp_tied(p, n_tied, seed)
 else:
     @pytest.mark.parametrize("k,seed", [(1, 0), (3, 7), (V, 11), (2 * V, 13)])
     def test_topk_support(k, seed):
@@ -115,3 +197,8 @@ else:
                                         (0.999, 13)])
     def test_topp_support(p, seed):
         _check_topp_support(p, seed)
+
+    @pytest.mark.parametrize("p,n_tied,seed", [(0.3, V, 0), (0.5, 4, 7),
+                                               (0.9, 2, 11), (0.2, 8, 13)])
+    def test_topp_tied(p, n_tied, seed):
+        _check_topp_tied(p, n_tied, seed)
