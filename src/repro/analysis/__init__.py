@@ -1,0 +1,45 @@
+"""Static invariant checkers for the serving engine and kernels.
+
+Four passes (see docs/static-analysis.md for the rule catalogue):
+
+  host_sync    RA1xx  one-readback-per-step / implicit device syncs
+  recompile    RA2xx  bounded jit shape variants + shared registry
+  donation     RA3xx  donated buffers never read after dispatch
+  pallas_spec  RA4xx  BlockSpec arity/alignment/VMEM contracts
+
+Run `python -m repro.analysis --strict` locally or in CI. Everything in this
+package is stdlib-only: the passes parse source and never import the modules
+they check.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List
+
+from repro.analysis import donation, host_sync, pallas_spec, recompile, rules
+from repro.analysis.common import SourceFile, Violation
+
+PASSES = {
+    "host-sync": host_sync.run,
+    "recompile": recompile.run,
+    "donation": donation.run,
+    "pallas-spec": pallas_spec.run,
+}
+
+
+def package_root() -> Path:
+    """The `repro` package directory that pass scopes are relative to."""
+    return Path(__file__).resolve().parents[1]
+
+
+def run_all(root: Path = None, passes=None) -> List[Violation]:
+    root = root or package_root()
+    out: List[Violation] = []
+    for name in (passes or PASSES):
+        out.extend(PASSES[name](root))
+    out.sort(key=lambda v: (v.file, v.line, v.code))
+    return out
+
+
+__all__ = ["PASSES", "run_all", "package_root", "Violation", "SourceFile",
+           "rules"]

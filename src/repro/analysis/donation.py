@@ -1,0 +1,210 @@
+"""Pass 3 — donation safety (RA301-RA302).
+
+`donate_argnums` hands the XLA runtime the donated buffer's memory: after the
+call, the Python reference points at freed (or aliased-output) storage, and
+reading it is undefined behaviour that jax only sometimes catches at runtime.
+The engine's convention is that every donating call *reassigns the donated
+name in the same statement* — `self.cache = self._insert(self.cache, ...)` —
+so there is no window in which the stale reference is reachable.
+
+The pass reconstructs donation maps from two sources:
+
+  * direct bindings:  `f = jax.jit(fn, donate_argnums=(0, 1))`
+  * the engine's lru_cache registry: a function whose body returns
+    `jax.jit(..., donate_argnums=...)` per `kind ==` branch, plus
+    `self.attr = _registry(cfg, "kind")` bindings mapping attributes to
+    those kinds.
+
+At every call through a donating binding, each donated positional argument
+that names a long-lived buffer (cache / params / opt_state / state) must be
+reassigned by the enclosing statement (RA301); any later read of that name
+before its next reassignment is RA302.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import rules
+from repro.analysis.common import (SourceFile, Violation, apply_waivers,
+                                   dotted, enclosing_function, load_files,
+                                   parent_map)
+
+_BUFFER_HINTS = ("cache", "params", "opt_state", "state")
+
+
+def _is_bufferish(arg: ast.AST) -> Optional[str]:
+    """Dotted name if `arg` names a long-lived buffer, else None."""
+    if isinstance(arg, (ast.Name, ast.Attribute)):
+        d = dotted(arg)
+        last = d.split(".")[-1]
+        if any(h in last for h in _BUFFER_HINTS):
+            return d
+    return None
+
+
+def _donate_indices(jit_call: ast.Call) -> Tuple[int, ...]:
+    for kw in jit_call.keywords:
+        if kw.arg == "donate_argnums" and isinstance(kw.value, ast.Tuple):
+            return tuple(e.value for e in kw.value.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, int))
+    return ()
+
+
+def _jit_call_in(expr: ast.AST) -> Optional[ast.Call]:
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Call) and dotted(n.func) == "jax.jit":
+            return n
+    return None
+
+
+def _registry_kind_map(tree: ast.AST) -> Dict[str, Set[Tuple[int, ...]]]:
+    """kind-string -> set of donate-index tuples, from any function whose
+    body dispatches `kind == "..."` to `return jax.jit(...)`."""
+    kinds: Dict[str, Set[Tuple[int, ...]]] = {}
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        for br in ast.walk(fn):
+            if not isinstance(br, ast.If):
+                continue
+            test = br.test
+            kind_strs = [c.value for c in ast.walk(test)
+                         if isinstance(c, ast.Constant)
+                         and isinstance(c.value, str)]
+            if not kind_strs:
+                continue
+            for ret in br.body:
+                jc = _jit_call_in(ret) if isinstance(ret, ast.Return) else None
+                if jc is not None:
+                    idx = _donate_indices(jc)
+                    for k in kind_strs:
+                        kinds.setdefault(k, set()).add(idx)
+    return kinds
+
+
+def _donor_bindings(tree: ast.AST,
+                    kinds: Dict[str, Set[Tuple[int, ...]]]
+                    ) -> Dict[str, Set[Tuple[int, ...]]]:
+    """Last-segment name -> possible donate-index tuples (non-empty only)."""
+    donors: Dict[str, Set[Tuple[int, ...]]] = {}
+    registry_names = set()
+    for fn in ast.walk(tree):
+        if isinstance(fn, ast.FunctionDef) and any(
+                isinstance(c, ast.Call) and dotted(c.func) == "jax.jit"
+                for c in ast.walk(fn)):
+            registry_names.add(fn.name)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        name = None
+        for t in node.targets:
+            if isinstance(t, (ast.Name, ast.Attribute)):
+                name = dotted(t).split(".")[-1]
+        if name is None:
+            continue
+        jc = _jit_call_in(node.value)
+        if jc is not None:
+            idx = _donate_indices(jc)
+            if idx:
+                donors.setdefault(name, set()).add(idx)
+            continue
+        # registry binding: self.attr = _registry(cfg, "kind", ...)
+        if isinstance(node.value, ast.Call) \
+                and dotted(node.value.func).split(".")[-1] in registry_names:
+            for a in node.value.args:
+                if isinstance(a, ast.Constant) and isinstance(a.value, str) \
+                        and a.value in kinds:
+                    for idx in kinds[a.value]:
+                        if idx:
+                            donors.setdefault(name, set()).add(idx)
+    return donors
+
+
+def _stmt_of(node: ast.AST, parents) -> Optional[ast.stmt]:
+    cur = node
+    while cur is not None and not isinstance(cur, ast.stmt):
+        cur = parents.get(cur)
+    return cur
+
+
+def _targets_of(stmt: ast.stmt) -> Set[str]:
+    out: Set[str] = set()
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, (ast.Name, ast.Attribute)):
+                d = dotted(n)
+                if d:
+                    out.add(d)
+    return out
+
+
+def _reads(stmt: ast.stmt, name: str) -> Optional[int]:
+    """Line of the first Load of `name` in `stmt`, else None."""
+    for n in ast.walk(stmt):
+        if isinstance(n, (ast.Name, ast.Attribute)) \
+                and isinstance(getattr(n, "ctx", None), ast.Load) \
+                and dotted(n) == name:
+            return n.lineno
+    return None
+
+
+def check_file(sf: SourceFile) -> List[Violation]:
+    out: List[Violation] = []
+    parents = parent_map(sf.tree)
+    kinds = _registry_kind_map(sf.tree)
+    donors = _donor_bindings(sf.tree, kinds)
+    if not donors:
+        return out
+
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted(node.func).split(".")[-1]
+        idx_sets = donors.get(callee)
+        if not idx_sets:
+            continue
+        donated = {i for idx in idx_sets for i in idx}
+        stmt = _stmt_of(node, parents)
+        fn = enclosing_function(node, parents)
+        for i in sorted(donated):
+            if i >= len(node.args):
+                continue
+            buf = _is_bufferish(node.args[i])
+            if buf is None:
+                continue
+            reassigned_here = stmt is not None and buf in _targets_of(stmt)
+            if not reassigned_here:
+                out.append(Violation(
+                    file=sf.rel, line=node.lineno, code="RA301",
+                    message=f"`{buf}` is donated (argnum {i}) to `{callee}` "
+                            "but the statement does not rebind it; the stale "
+                            "reference now points at freed storage"))
+                # RA302: a later read before the next rebind
+                if fn is not None:
+                    body = [s for s in ast.walk(fn) if isinstance(s, ast.stmt)
+                            and s.lineno > node.lineno]
+                    for s in sorted(body, key=lambda s: s.lineno):
+                        if buf in _targets_of(s):
+                            break
+                        rd = _reads(s, buf)
+                        if rd is not None:
+                            out.append(Violation(
+                                file=sf.rel, line=rd, code="RA302",
+                                message=f"`{buf}` read after being donated "
+                                        f"at line {node.lineno}"))
+                            break
+    return apply_waivers(sf, out)
+
+
+def run(root) -> List[Violation]:
+    out: List[Violation] = []
+    for sf in load_files(root, rules.DONATION_SCOPE):
+        out.extend(check_file(sf))
+    return out

@@ -1,0 +1,232 @@
+"""Pass 4 — Pallas block-spec contracts (RA401-RA404).
+
+Mosaic's failure modes for a bad BlockSpec are late and opaque (a lowering
+error at first trace, or silent garbage from a misaligned tile), so this pass
+re-derives the kernel-side contracts from the AST of each
+`kernels/*/kernel.py` without importing it:
+
+  RA401  every index_map must accept grid-rank + num_scalar_prefetch
+         arguments (scalar-prefetch refs are appended to the grid indices);
+  RA402  an index_map must return one coordinate per block-shape dim;
+  RA403  literal block/scratch dims in the last two (sublane, lane)
+         positions must be multiples of SUBLANE_MULTIPLE (the same constant
+         `ModelConfig.validate_paged` enforces on page_size/prefill_chunk —
+         symbolic dims are checked there at runtime, literals here);
+  RA404  the summed worst-case footprint of all blocks + VMEM scratch must
+         fit under VMEM_CAP_BYTES. Symbolic dims resolve through
+         WORST_CASE_DIMS; the estimate ignores double buffering, so it is a
+         lower bound and the cap is the full physical VMEM.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+from repro.analysis import rules
+from repro.analysis.common import (SourceFile, Violation, apply_waivers,
+                                   dotted, enclosing_function, parent_map)
+
+
+def _resolve_dim(node: ast.AST) -> int:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        return rules.WORST_CASE_DIMS.get(node.id, rules.DEFAULT_DIM)
+    if isinstance(node, ast.Attribute):
+        return rules.WORST_CASE_DIMS.get(node.attr, rules.DEFAULT_DIM)
+    if isinstance(node, ast.BinOp):
+        lo, hi = _resolve_dim(node.left), _resolve_dim(node.right)
+        if isinstance(node.op, ast.Mult):
+            return lo * hi
+        if isinstance(node.op, ast.Add):
+            return lo + hi
+        if isinstance(node.op, ast.Sub):
+            return max(lo - hi, 1)
+        if isinstance(node.op, ast.FloorDiv):
+            return max(lo // max(hi, 1), 1)
+    return rules.DEFAULT_DIM
+
+
+def _shape_elems(node: ast.AST) -> Optional[List[ast.AST]]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return None
+
+
+def _index_map_signature(expr: ast.AST, scopes: List[ast.AST]
+                         ) -> Optional[Tuple[int, bool, Optional[int], int]]:
+    """(n_required_args, has_vararg, return_rank, lineno) for a lambda or a
+    function name resolved innermost-scope-first; None when unresolvable."""
+    target = None
+    if isinstance(expr, ast.Lambda):
+        target = expr
+    elif isinstance(expr, ast.Name):
+        for scope in scopes:
+            for n in ast.walk(scope):
+                if isinstance(n, ast.FunctionDef) and n.name == expr.id:
+                    target = n
+                    break
+            if target is not None:
+                break
+    if target is None:
+        return None
+    a = target.args
+    required = len(a.posonlyargs) + len(a.args) - len(a.defaults)
+    vararg = a.vararg is not None
+    ret_rank = None
+    if isinstance(target, ast.Lambda):
+        if isinstance(target.body, ast.Tuple):
+            ret_rank = len(target.body.elts)
+    else:
+        for r in ast.walk(target):
+            if isinstance(r, ast.Return) and isinstance(r.value, ast.Tuple):
+                ret_rank = len(r.value.elts)
+                break
+    return required, vararg, ret_rank, target.lineno
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _block_specs(node: ast.AST) -> List[ast.Call]:
+    """All pl.BlockSpec(...) calls inside an in_specs/out_specs expression."""
+    if node is None:
+        return []
+    return [c for c in ast.walk(node)
+            if isinstance(c, ast.Call)
+            and dotted(c.func).split(".")[-1] == "BlockSpec"]
+
+
+def _vmem_scratch_shapes(node: ast.AST) -> List[ast.Call]:
+    if node is None:
+        return []
+    return [c for c in ast.walk(node)
+            if isinstance(c, ast.Call)
+            and dotted(c.func).split(".")[-1] == "VMEM"]
+
+
+def _check_alignment(sf: SourceFile, elems: List[ast.AST], where: str,
+                     out: List[Violation]) -> None:
+    for pos, e in enumerate(elems[-2:]):
+        if isinstance(e, ast.Constant) and isinstance(e.value, int):
+            v = e.value
+            if v != 1 and v % rules.SUBLANE_MULTIPLE != 0:
+                dim = "lane" if pos == len(elems[-2:]) - 1 else "sublane"
+                out.append(Violation(
+                    file=sf.rel, line=e.lineno, code="RA403",
+                    message=f"{where}: {dim} dim {v} is not a multiple of "
+                            f"{rules.SUBLANE_MULTIPLE}"))
+
+
+def check_file(sf: SourceFile) -> List[Violation]:
+    out: List[Violation] = []
+    parents = parent_map(sf.tree)
+
+    for call in ast.walk(sf.tree):
+        if not isinstance(call, ast.Call) \
+                or dotted(call.func).split(".")[-1] != "pallas_call":
+            continue
+
+        grid = _kw(call, "grid")
+        num_prefetch = 0
+        in_specs = _kw(call, "in_specs")
+        out_specs = _kw(call, "out_specs")
+        scratch = _kw(call, "scratch_shapes")
+
+        spec_expr = _kw(call, "grid_spec")
+        if isinstance(spec_expr, ast.Name):
+            scope = enclosing_function(call, parents) or sf.tree
+            for a in ast.walk(scope):
+                if isinstance(a, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == spec_expr.id
+                        for t in a.targets):
+                    spec_expr = a.value
+                    break
+        if isinstance(spec_expr, ast.Call):
+            grid = _kw(spec_expr, "grid") or grid
+            in_specs = _kw(spec_expr, "in_specs") or in_specs
+            out_specs = _kw(spec_expr, "out_specs") or out_specs
+            scratch = _kw(spec_expr, "scratch_shapes") or scratch
+            np_node = _kw(spec_expr, "num_scalar_prefetch")
+            if isinstance(np_node, ast.Constant) \
+                    and isinstance(np_node.value, int):
+                num_prefetch = np_node.value
+
+        grid_rank = None
+        grid_elems = _shape_elems(grid) if grid is not None else None
+        if grid_elems is not None:
+            grid_rank = len(grid_elems)
+
+        total_bytes = 0
+        specs = _block_specs(in_specs) + _block_specs(out_specs)
+        for spec in specs:
+            shape = _kw(spec, "block_shape")
+            index_map = _kw(spec, "index_map")
+            pos_args = list(spec.args)
+            if shape is None and pos_args:
+                shape = pos_args.pop(0)
+            if index_map is None and pos_args:
+                index_map = pos_args.pop(0)
+            elems = _shape_elems(shape) if shape is not None else None
+
+            if elems is not None:
+                _check_alignment(sf, elems, "BlockSpec", out)
+                total_bytes += rules.F32_BYTES * _prod(elems)
+
+            if index_map is not None:
+                fn_scope = enclosing_function(call, parents)
+                scopes = ([fn_scope] if fn_scope is not None else []) \
+                    + [sf.tree]
+                sig = _index_map_signature(index_map, scopes)
+                if sig is not None and grid_rank is not None:
+                    required, vararg, ret_rank, line = sig
+                    expected = grid_rank + num_prefetch
+                    bad = (required > expected) if vararg \
+                        else (required != expected)
+                    if bad:
+                        out.append(Violation(
+                            file=sf.rel, line=spec.lineno, code="RA401",
+                            message=f"index_map takes {required} args but "
+                                    f"grid rank {grid_rank} + "
+                                    f"{num_prefetch} scalar-prefetch refs "
+                                    f"= {expected}"))
+                    if ret_rank is not None and elems is not None \
+                            and ret_rank != len(elems):
+                        out.append(Violation(
+                            file=sf.rel, line=spec.lineno, code="RA402",
+                            message=f"index_map returns {ret_rank} coords "
+                                    f"for a {len(elems)}-dim block shape"))
+
+        for vm in _vmem_scratch_shapes(scratch):
+            shp = vm.args[0] if vm.args else None
+            elems = _shape_elems(shp) if shp is not None else None
+            if elems is not None:
+                _check_alignment(sf, elems, "VMEM scratch", out)
+                total_bytes += rules.F32_BYTES * _prod(elems)
+
+        if total_bytes > rules.VMEM_CAP_BYTES:
+            out.append(Violation(
+                file=sf.rel, line=call.lineno, code="RA404",
+                message=f"estimated VMEM footprint {total_bytes} B "
+                        f"(worst-case dims) exceeds cap "
+                        f"{rules.VMEM_CAP_BYTES} B"))
+    return apply_waivers(sf, out)
+
+
+def _prod(elems: List[ast.AST]) -> int:
+    p = 1
+    for e in elems:
+        p *= max(_resolve_dim(e), 1)
+    return p
+
+
+def run(root: Path) -> List[Violation]:
+    out: List[Violation] = []
+    for p in sorted(root.glob(rules.PALLAS_SCOPE_GLOB)):
+        out.extend(check_file(SourceFile.load(p, root)))
+    return out

@@ -1,0 +1,212 @@
+"""Pass 2 — recompile budget (RA201-RA204).
+
+The engine's latency contract allows a bounded set of jit shape variants per
+config: prompt/score buffers bucket to powers of two *clamped to max_len*,
+paged read widths bucket via `_chunk_live`/`_live_pages`, ragged ingest rows
+bucket via a pow2 loop, and every `jax.jit` in serving lives inside the
+shared `lru_cache` registry so fleets and A/B pairs share one trace cache.
+
+This pass enforces the *syntactic* shape of that contract:
+
+  RA201  a call to a power-of-two bucket helper that does not clamp (either
+         the helper itself returns `min(...)` or the call site wraps it in
+         `min(...)`) — the PR-5 `score()` bug class: one long request
+         compiles (and can OOM) an arbitrarily large variant.
+  RA202  a `jax.jit` call in serving code outside an lru_cache-decorated
+         registry function.
+  RA203  a call to a static-argnums jitted engine entry point whose static
+         (first) argument is visibly request-derived — contains `len(...)`
+         or a per-request attribute — or is a local name with no bucketed
+         provenance.
+  RA204  a jit registry (a function returning >= 2 jax.jit closures) that is
+         not lru_cache-decorated, so every engine instance recompiles.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis import rules
+from repro.analysis.common import (SourceFile, Violation, apply_waivers,
+                                   dotted, enclosing_function, load_files,
+                                   parent_map)
+
+# entry points the engine jits with static_argnums=(0,): the first argument
+# is a SHAPE and must come from a bucketing helper or a config bound
+_STATIC_ARG_CALLEES = ("_prefill_chunk", "_prefill_ragged", "_decode_run")
+_REQUEST_ATTRS = {"ctx_len", "prompt", "tokens", "prefill_toks", "pending",
+                  "suffix", "carry_tokens"}
+
+
+def _helper_name(call: ast.Call) -> Optional[str]:
+    last = dotted(call.func).split(".")[-1]
+    return last if last in rules.BUCKET_HELPERS else None
+
+
+def _self_clamping_helpers(tree: ast.AST) -> Set[str]:
+    """Bucket helpers whose own return value is clamped (contains min(...)
+    or delegates to another self-clamping helper)."""
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)
+            and n.name in rules.BUCKET_HELPERS}
+    clamped: Set[str] = set()
+    for _ in range(len(defs) + 1):          # fixpoint over delegation chains
+        for name, fn in defs.items():
+            if name in clamped:
+                continue
+            for ret in ast.walk(fn):
+                if not isinstance(ret, ast.Return) or ret.value is None:
+                    continue
+                for c in ast.walk(ret.value):
+                    if isinstance(c, ast.Call) and (
+                            dotted(c.func) == "min"
+                            or _helper_name(c) in clamped):
+                        clamped.add(name)
+    return clamped
+
+
+def _wrapped_in_min(node: ast.AST, parents: Dict[ast.AST, ast.AST]) -> bool:
+    cur = parents.get(node)
+    while cur is not None and not isinstance(cur, ast.stmt):
+        if isinstance(cur, ast.Call) and dotted(cur.func) == "min":
+            return True
+        cur = parents.get(cur)
+    return False
+
+
+def _bucketed_names(fn: ast.FunctionDef) -> Set[str]:
+    """Local names with bucketed provenance inside `fn`: assigned from a
+    bucket-helper call, doubled in a pow2 while loop, looped over a bucketed
+    collection, or a collection accumulating bucketed values."""
+    bucketed: Set[str] = set()
+
+    def expr_bucketed(e: ast.AST) -> bool:
+        for n in ast.walk(e):
+            if isinstance(n, ast.Call) and _helper_name(n):
+                return True
+            if isinstance(n, ast.Name) and n.id in bucketed:
+                return True
+        return False
+
+    for _ in range(3):                       # small fixpoint
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and expr_bucketed(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        bucketed.add(t.id)
+            elif isinstance(node, ast.While):
+                # `while r < n: r *= 2` — the pow2 bucket idiom
+                for sub in ast.walk(node):
+                    if (isinstance(sub, ast.AugAssign)
+                            and isinstance(sub.op, ast.Mult)
+                            and isinstance(sub.target, ast.Name)):
+                        bucketed.add(sub.target.id)
+            elif isinstance(node, ast.For) and expr_bucketed(node.iter):
+                if isinstance(node.target, ast.Name):
+                    bucketed.add(node.target.id)
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr in ("add", "append")
+                  and isinstance(node.func.value, ast.Name)
+                  and node.args and expr_bucketed(node.args[0])):
+                bucketed.add(node.func.value.id)
+    return bucketed
+
+
+def _first_arg_ok(arg: ast.AST, bucketed: Set[str]) -> Optional[str]:
+    """None if the static arg is acceptable, else a reason string."""
+    for n in ast.walk(arg):
+        if isinstance(n, ast.Call) and _helper_name(n):
+            return None
+        if isinstance(n, ast.Call) and dotted(n.func) == "len":
+            return "contains len(...) of request data"
+        if isinstance(n, ast.Attribute) and n.attr in _REQUEST_ATTRS:
+            return f"derived from per-request `.{n.attr}`"
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, int):
+        return None
+    if isinstance(arg, ast.Attribute):
+        if arg.attr in rules.BOUNDED_ATTR_NAMES:
+            return None
+        return None                          # conservative: config attrs pass
+    if isinstance(arg, ast.Name):
+        if arg.id in bucketed:
+            return None
+        return f"`{arg.id}` has no bucketed provenance in this function"
+    return None
+
+
+def _has_lru_cache(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        d = dotted(dec) or dotted(getattr(dec, "func", ast.Pass()))
+        if "lru_cache" in d or "cache" == d.split(".")[-1]:
+            return True
+    return False
+
+
+def check_file(sf: SourceFile) -> List[Violation]:
+    out: List[Violation] = []
+    parents = parent_map(sf.tree)
+    clamped = _self_clamping_helpers(sf.tree)
+    in_serving = "serving/" in sf.rel or sf.rel.startswith("serving")
+
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef):
+            # registry pattern: a function whose RETURN VALUE is a jitted
+            # closure (vs. one that merely builds and calls jits locally)
+            returns_jit = any(
+                isinstance(r, ast.Return) and r.value is not None
+                and any(isinstance(c, ast.Call)
+                        and dotted(c.func) == "jax.jit"
+                        for c in ast.walk(r.value))
+                for r in ast.walk(node) if isinstance(r, ast.Return))
+            if returns_jit and not _has_lru_cache(node):
+                out.append(Violation(
+                    file=sf.rel, line=node.lineno, code="RA204",
+                    message=f"jit registry `{node.name}` returns jitted "
+                            "closures but is not lru_cache-decorated: every "
+                            "caller recompiles its variants"))
+
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        # RA202: serving jits must live in the shared registry
+        if dotted(node.func) == "jax.jit" and in_serving:
+            fn = enclosing_function(node, parents)
+            if fn is None or not _has_lru_cache(fn):
+                out.append(Violation(
+                    file=sf.rel, line=node.lineno, code="RA202",
+                    message="jax.jit outside the shared lru_cache registry: "
+                            "engines with the same config will not share "
+                            "this trace cache"))
+        # RA201: unclamped bucket
+        helper = _helper_name(node)
+        if helper and helper not in clamped \
+                and not _wrapped_in_min(node, parents):
+            fn = enclosing_function(node, parents)
+            # the helper's own recursive body is not a call site to clamp
+            if fn is None or fn.name != helper:
+                out.append(Violation(
+                    file=sf.rel, line=node.lineno, code="RA201",
+                    message=f"`{helper}(...)` used without an upper clamp: "
+                            "one long request compiles an unbounded shape "
+                            "variant (wrap in min(..., max_len))"))
+        # RA203: static shape args at engine entry points
+        last = dotted(node.func).split(".")[-1]
+        if any(last.startswith(c) for c in _STATIC_ARG_CALLEES) \
+                and isinstance(node.func, ast.Attribute) and node.args:
+            fn = enclosing_function(node, parents)
+            bucketed = _bucketed_names(fn) if fn is not None else set()
+            reason = _first_arg_ok(node.args[0], bucketed)
+            if reason:
+                out.append(Violation(
+                    file=sf.rel, line=node.lineno, code="RA203",
+                    message=f"static argument of `{last}` is not visibly "
+                            f"bucketed: {reason}"))
+    return apply_waivers(sf, out)
+
+
+def run(root) -> List[Violation]:
+    out: List[Violation] = []
+    for sf in load_files(root, rules.RECOMPILE_SCOPE):
+        out.extend(check_file(sf))
+    return out

@@ -1,0 +1,137 @@
+"""Shared constants and rule registry for the `repro.analysis` checkers.
+
+This module is intentionally stdlib-only: it is imported both by the static
+passes (which must run without jax installed, e.g. in a bare CI job) and by
+runtime validation code (`ModelConfig.validate_paged`), so the runtime check
+and the static pallas-spec pass read the SAME alignment constants and can
+never disagree.
+"""
+from __future__ import annotations
+
+import re
+
+# ---------------------------------------------------------------------------
+# TPU tiling contracts (see /opt guides + docs/static-analysis.md).
+#
+# The second-to-last ("sublane") dimension of a VMEM tile must be a multiple
+# of 8 for float32 (bf16/int8 need 16/32, so 8 is the *minimum* contract the
+# repo enforces everywhere a page or chunk becomes a tile dimension); the
+# last ("lane") dimension of the native tile is 128. `validate_paged` applies
+# SUBLANE_MULTIPLE to page_size/prefill_chunk at engine construction; the
+# pallas-spec pass applies it to literal BlockSpec dims at analysis time.
+# ---------------------------------------------------------------------------
+SUBLANE_MULTIPLE = 8
+LANE_MULTIPLE = 128
+
+# Static VMEM budget for one kernel invocation: block tiles + scratch must
+# fit comfortably in the ~16 MiB of VMEM per TensorCore. The estimator is a
+# conservative lower bound (it ignores Mosaic's double buffering), so the cap
+# is the full physical size rather than a derated one.
+VMEM_CAP_BYTES = 16 * 1024 * 1024
+
+# Worst-case values for symbolic dimensions appearing in BlockSpec / scratch
+# shapes, keyed by the variable names the kernels use. The pallas-spec pass
+# resolves literal dims exactly and symbolic dims from this table; unknown
+# names fall back to DEFAULT_DIM. Values are the maxima the engine/configs
+# can reach (page_size <= 256, prefill_chunk <= 256, head_dim <= 128,
+# q_per_kv <= 8, d_model <= 4096, scan chunk <= 512).
+WORST_CASE_DIMS = {
+    "hd": 128, "ps": 256, "rep": 8, "C": 256,
+    "bq": 256, "bkv": 256, "bs": 512, "br": 256,
+    "D": 4096, "Q": 256, "P": 256, "N": 256,
+}
+DEFAULT_DIM = 128
+F32_BYTES = 4
+
+# ---------------------------------------------------------------------------
+# Rule registry. Codes are stable: tests assert them and pragmas name them.
+# ---------------------------------------------------------------------------
+RULES = {
+    # host-sync / trace-safety
+    "RA101": "implicit host sync: float()/int()/bool()/.item() on a device "
+             "value in a serving hot path",
+    "RA102": "np.asarray/np.array on a device value forces a transfer in a "
+             "serving hot path",
+    "RA103": "jax.device_get outside the sanctioned per-step harvest site",
+    "RA104": "block_until_ready in a serving hot path",
+    # recompile budget
+    "RA201": "power-of-two bucket used as a shape without an upper clamp "
+             "(compiles O(requests) variants)",
+    "RA202": "jax.jit call site outside the shared lru_cache jit registry",
+    "RA203": "static jit argument fed from a raw request-derived value "
+             "instead of a bucketing helper",
+    "RA204": "jit registry is not lru_cache-decorated (engines recompile "
+             "per instance)",
+    # donation safety
+    "RA301": "donated buffer not reassigned from the donating call's result",
+    "RA302": "donated buffer read after the jitted call that consumed it",
+    # pallas block specs
+    "RA401": "index_map arity does not match grid rank + num_scalar_prefetch",
+    "RA402": "BlockSpec block-shape rank does not match its index_map's "
+             "return rank",
+    "RA403": "literal BlockSpec/scratch dim in the last two positions is "
+             "not sublane-aligned (multiple of 8)",
+    "RA404": "estimated VMEM footprint (blocks + scratch) exceeds the cap",
+}
+
+# ---------------------------------------------------------------------------
+# Pass scopes: path suffixes/prefixes relative to the repro package root.
+# ---------------------------------------------------------------------------
+# Serving hot paths + telemetry/training loops the one-readback contract and
+# taint analysis cover.
+HOST_SYNC_SCOPE = (
+    "serving/", "models/paged_cache.py", "models/transformer.py",
+    "training/train_loop.py", "finetune/", "core/profiler.py",
+)
+# jit call-site discipline (shared registry, bounded buckets).
+RECOMPILE_SCOPE = ("serving/", "finetune/", "training/")
+# donation-safety: files that donate buffers today.
+DONATION_SCOPE = ("serving/engine.py", "training/train_loop.py")
+# pallas-spec: every kernel module.
+PALLAS_SCOPE_GLOB = "kernels/*/kernel.py"
+
+# The ONLY function allowed to call jax.device_get without a pragma: the
+# engine's deferred-harvest readback (one device_get per step, the plan/run
+# contract). Everything else — admission-time first-token draws, offline
+# scoring, train-loop logging — must carry an inline waiver with a reason.
+HOST_SYNC_ALLOWLIST = {("serving/engine.py", "_harvest")}
+
+# Helpers whose results count as "bucketed" (bounded jit shape variants).
+BUCKET_HELPERS = ("_bucket", "_chunk_live", "_live_pages", "_pow2_bucket")
+# Attribute names that are config-bounded (not request-derived) when used as
+# a static jit argument.
+BOUNDED_ATTR_NAMES = {
+    "live", "max_batch", "max_len", "prefill_chunk", "pages_per_seq",
+    "page_size", "n_pages", "seq_len", "max_sketch_tokens",
+}
+
+# ---------------------------------------------------------------------------
+# Inline waiver pragma:   # repro-analysis: disable=RA101 reason=why
+# (comma-separated codes; reason is mandatory under --strict). The pragma
+# waives matches on its own line or, when it is a whole-line comment, on the
+# line directly below.
+# ---------------------------------------------------------------------------
+PRAGMA_RE = re.compile(
+    r"#\s*repro-analysis:\s*disable=(?P<codes>[A-Z0-9,\s]+?)"
+    r"(?:\s+reason=(?P<reason>.*))?$")
+
+
+def parse_pragmas(source: str):
+    """Map line number -> (set of rule codes, reason or None).
+
+    A pragma on a code line waives that line; a standalone comment line
+    waives the following line (both entries are emitted).
+    """
+    out = {}
+    lines = source.splitlines()
+    for i, line in enumerate(lines, 1):
+        m = PRAGMA_RE.search(line)
+        if not m:
+            continue
+        codes = {c.strip() for c in m.group("codes").split(",") if c.strip()}
+        reason = m.group("reason")
+        reason = reason.strip() if reason else None
+        out[i] = (codes, reason)
+        if line.lstrip().startswith("#"):
+            out[i + 1] = (codes, reason)
+    return out

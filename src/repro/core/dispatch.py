@@ -8,7 +8,7 @@ quadratic-cost padding waste the paper calls out).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 from repro.serving.requests import SketchTask
 

@@ -12,7 +12,6 @@ total length; recurse while the latency hard-constraint still holds.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, List, Optional, Sequence
 
 

@@ -8,7 +8,7 @@ higher-quality SLM (avoiding model-switch churn under load).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Sequence
 
 from repro.core.profiler import LatencyModel
 from repro.core.scheduler import EdgeModelInfo

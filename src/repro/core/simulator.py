@@ -18,17 +18,15 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import math
 import random
 from typing import Dict, List, Optional
 
 from repro.core.dispatch import MultiListQueue
-from repro.core.exec_optimizer import merge_once, plan_expansion
-from repro.core.profiler import (LatencyModel, RuntimeMonitor, capability,
-                                 paper_latency_model)
+from repro.core.exec_optimizer import plan_expansion
+from repro.core.profiler import RuntimeMonitor, capability, paper_latency_model
 from repro.core.scheduler import DynamicScheduler, EdgeModelInfo
 from repro.serving.network import NetworkModel
-from repro.serving.requests import SLA, SketchTask
+from repro.serving.requests import SketchTask
 
 
 @dataclasses.dataclass

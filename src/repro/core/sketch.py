@@ -14,8 +14,7 @@ Length prediction: LLMs can perceive response length in advance (paper cites
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
+from typing import List
 
 from repro.data import tokenizer as tok
 from repro.data.corpus import SHORT_CATEGORIES

@@ -6,7 +6,7 @@ real cluster each host packs its own shard (batch dim is data-parallel).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Tuple
+from typing import Iterator, List, Tuple
 
 import numpy as np
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import json
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Optional
 
 from repro.configs.registry import SHAPES, InputShape, get_config
 from repro.models.config import ModelConfig

@@ -12,7 +12,7 @@ sketch becomes r_w, the other r_l, forming the triplet dataset D={(x,r_w,r_l)}.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Tuple
+from typing import Callable
 
 from repro.core.metrics import rouge_l
 

@@ -7,8 +7,7 @@ R is a small transformer with a mean-pooled scalar head over 'x | r'.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +79,8 @@ def train_reward_model(cfg: ModelConfig, triples: Sequence[PreferenceTriple],
                                             jnp.asarray(tw[idx]),
                                             jnp.asarray(tl[idx]))
         if (i + 1) % 25 == 0 or i == n_steps - 1:
-            log_fn(f"RM step {i+1}: loss={float(loss):.4f} "
-                   f"pair_acc={float(acc):.3f}")
+            # repro-analysis: disable=RA103 reason=log-interval readback; one transfer instead of two scalar syncs
+            loss_h, acc_h = jax.device_get((loss, acc))
+            log_fn(f"RM step {i+1}: loss={loss_h:.4f} "
+                   f"pair_acc={acc_h:.3f}")
     return params

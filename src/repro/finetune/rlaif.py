@@ -11,7 +11,6 @@ token-wise on sampled sketches (log pi_theta - log pi_SFT).
 from __future__ import annotations
 
 import dataclasses
-from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -38,15 +37,32 @@ class RLAIFConfig:
     seed: int = 0
 
 
-def _seq_logprob(cfg: ModelConfig, params, prompt_ids, gen_ids):
-    """Differentiable sum log pi(gen | prompt); returns (sum_lp, per_token)."""
-    full = jnp.concatenate([prompt_ids, gen_ids])
-    logits, _ = transformer.forward(cfg, params, full[None, :-1])
+def _pow2_bucket(n: int, cap: int) -> int:
+    """Pow2 bucket clamped to cap: O(log cap) jit shape variants total,
+    instead of one variant per distinct (prompt, sketch) length pair."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+def _seq_logprob(cfg: ModelConfig, params, full_ids, prompt_len, gen_len):
+    """Differentiable sum log pi(gen | prompt) over a right-padded buffer.
+
+    `full_ids` is prompt+gen zero-padded to a bucketed length; causal
+    attention makes logits at positions < prompt_len + gen_len independent
+    of the padding, so bucketing changes trace shapes, not values.
+    prompt_len/gen_len are traced scalars (they select the mask, they do
+    not shape the computation). Returns (sum_lp, masked per-token lp, mask)."""
+    logits, _ = transformer.forward(cfg, params, full_ids[None, :-1])
     logp = jax.nn.log_softmax(logits[0].astype(jnp.float32), axis=-1)
-    targets = full[1:]
+    targets = full_ids[1:]
     lp = jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
-    gen_lp = lp[prompt_ids.shape[0] - 1:]
-    return jnp.sum(gen_lp), gen_lp
+    pos = jnp.arange(lp.shape[0])
+    mask = ((pos >= prompt_len - 1)
+            & (pos < prompt_len - 1 + gen_len)).astype(jnp.float32)
+    gen_lp = lp * mask
+    return jnp.sum(gen_lp), gen_lp, mask
 
 
 def run_rlaif(policy_cfg: ModelConfig, policy_params,
@@ -60,17 +76,21 @@ def run_rlaif(policy_cfg: ModelConfig, policy_params,
     opt_state = opt_lib.init_opt_state(policy_params)
     baseline = 0.0
 
-    def loss_fn(params, prompt_ids, gen_ids, advantage, ref_lp):
-        sum_lp, gen_lp = _seq_logprob(policy_cfg, params, prompt_ids, gen_ids)
-        kl = jnp.mean(gen_lp - ref_lp)          # E[log pi - log pi_sft]
-        pg = -advantage * sum_lp / jnp.maximum(gen_ids.shape[0], 1)
+    def loss_fn(params, full_ids, prompt_len, gen_len, advantage, ref_lp):
+        sum_lp, gen_lp, mask = _seq_logprob(policy_cfg, params, full_ids,
+                                            prompt_len, gen_len)
+        n_gen = jnp.maximum(jnp.sum(mask), 1.0)
+        # E[log pi - log pi_sft] over the generated positions only
+        kl = jnp.sum((gen_lp - ref_lp) * mask) / n_gen
+        pg = -advantage * sum_lp / n_gen
         return pg + cfg.gamma * kl, (kl, sum_lp)
 
     grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
     update = jax.jit(lambda p, g, o: opt_lib.adamw_update(opt_cfg, p, g, o))
     rm_reward = jax.jit(lambda toks: reward_fwd(rm_cfg, rm_params, toks))
     ref_lp_fn = jax.jit(
-        lambda pids, gids: _seq_logprob(policy_cfg, sft_params, pids, gids)[1])
+        lambda full, pl, gl: _seq_logprob(policy_cfg, sft_params,
+                                          full, pl, gl)[1])
 
     # one engine, params swapped per step (sampling is non-differentiable;
     # rebuilding the engine would re-jit its decode/prefill closures)
@@ -81,31 +101,43 @@ def run_rlaif(policy_cfg: ModelConfig, policy_params,
     for step in range(cfg.n_steps):
         engine.params = policy_params
         idx = rng.integers(0, len(examples), cfg.batch)
-        prompts, gens, rewards = [], [], []
+        prompts, gens, rewards_d = [], [], []
         for i in idx:
             ex = examples[i]
             prompt = tok.encode(f"A: {ex.answer[:200]}\nS:")
             (out, _), = engine.generate([prompt], max_new=cfg.max_sketch_tokens)
             sketch = tok.decode(out)
             r_in = encode_pair(ex.answer[:200], sketch, cfg.seq_len)
-            rewards.append(float(rm_reward(jnp.asarray(r_in[None]))[0]))
+            rewards_d.append(rm_reward(jnp.asarray(r_in[None]))[0])
             prompts.append(np.asarray(prompt, np.int32))
             gens.append(np.asarray(out if out else [tok.EOS], np.int32))
+        # repro-analysis: disable=RA103 reason=one batched reward readback per step (was one scalar sync per sample)
+        rewards = [float(v) for v in jax.device_get(rewards_d)]
         mean_r = float(np.mean(rewards))
         baseline = 0.9 * baseline + 0.1 * mean_r if step else mean_r
-        kls = []
+        kls_d = []
         grads_acc = None
         for p_ids, g_ids, r in zip(prompts, gens, rewards):
-            p_j, g_j = jnp.asarray(p_ids), jnp.asarray(g_ids)
-            ref_lp = ref_lp_fn(p_j, g_j)
+            n_p, n_g = len(p_ids), len(g_ids)
+            L = _pow2_bucket(n_p + n_g, 512)
+            n_g = min(n_g, max(L - n_p, 0))     # tail-truncate at the cap
+            full = np.zeros((L,), np.int32)
+            full[:n_p] = p_ids
+            full[n_p:n_p + n_g] = g_ids[:n_g]
+            full_j = jnp.asarray(full)
+            pl_j = jnp.asarray(n_p, jnp.int32)
+            gl_j = jnp.asarray(n_g, jnp.int32)
+            ref_lp = ref_lp_fn(full_j, pl_j, gl_j)
             adv = (1.0 - cfg.gamma) * (r - baseline)
-            (loss, (kl, _)), grads = grad_fn(policy_params, p_j, g_j,
-                                             jnp.asarray(adv), ref_lp)
-            kls.append(float(kl))
+            (loss, (kl, _)), grads = grad_fn(policy_params, full_j, pl_j,
+                                             gl_j, jnp.asarray(adv), ref_lp)
+            kls_d.append(kl)
             grads_acc = grads if grads_acc is None else jax.tree.map(
                 jnp.add, grads_acc, grads)
         grads_acc = jax.tree.map(lambda g: g / cfg.batch, grads_acc)
         policy_params, opt_state, _ = update(policy_params, grads_acc, opt_state)
+        # repro-analysis: disable=RA103 reason=one batched KL readback per step (was one scalar sync per sample)
+        kls = [float(v) for v in jax.device_get(kls_d)]
         history.append({"step": step, "mean_reward": mean_r,
                         "kl": float(np.mean(kls))})
         if (step + 1) % 10 == 0 or step == cfg.n_steps - 1:

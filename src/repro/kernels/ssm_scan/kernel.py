@@ -14,7 +14,6 @@ Grid: (B*H, S // Q) — state scratch persists across the minor (chunk) axis.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ssm_scan import kernel as _kernel
-from repro.kernels.ssm_scan import ref as _ref
 from repro.kernels.runtime import resolve_interpret
 
 

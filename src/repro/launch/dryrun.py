@@ -25,7 +25,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import registry
 from repro.configs.registry import SHAPES, adapt_for_shape, input_specs, shape_supported

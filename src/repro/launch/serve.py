@@ -12,7 +12,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 
 from repro.configs.pice_cloud_edge import (TINY_CLOUD, TINY_EDGE_CONFIGS)
 from repro.core import metrics as metrics_lib
@@ -20,9 +19,7 @@ from repro.core.profiler import cost_coefficient, profile_engine
 from repro.core.progressive import PICEConfig, PICEPipeline
 from repro.core.scheduler import EdgeModelInfo
 from repro.data import corpus as corpus_lib
-from repro.data import tokenizer as tok
 from repro.data.pipeline import PackedDataset
-from repro.models import transformer
 from repro.serving.engine import InferenceEngine
 from repro.serving.requests import Request
 from repro.training import optimizer as opt_lib

@@ -16,10 +16,8 @@ Baseline policy (paper-faithful Megatron-style TP over `model`, DP over
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding as shd

@@ -1,8 +1,6 @@
 """Step-function builders shared by the trainer, server, and dry-run."""
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

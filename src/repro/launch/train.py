@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs import registry
 from repro.data import corpus as corpus_lib

@@ -13,7 +13,6 @@ decode offsets in one batch.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -180,24 +180,29 @@ class ModelConfig:
 
         Each page is one (page_size, head_dim) K/V tile streamed per grid
         step by the Pallas paged flash-decode kernel, so under use_pallas
-        page_size must be sublane-aligned (multiple of 8 covers f32 and
-        bf16 tiling); head_dim alignment is shared with the dense kernels.
+        page_size must be sublane-aligned; head_dim alignment is shared with
+        the dense kernels. The multiple comes from
+        `repro.analysis.rules.SUBLANE_MULTIPLE` — the same constant the
+        static pallas-spec pass applies to literal BlockSpec dims, so the
+        runtime check and the CI gate cannot disagree.
         """
+        from repro.analysis.rules import SUBLANE_MULTIPLE
         assert page_size > 0, "page_size must be positive"
         assert max_len % page_size == 0, "max_len must be page-aligned"
         if self.use_pallas:
-            assert page_size % 8 == 0, (
+            assert page_size % SUBLANE_MULTIPLE == 0, (
                 "use_pallas streams (page_size, head_dim) page tiles; "
-                "page_size must be a multiple of 8 (TPU sublane alignment)")
+                f"page_size must be a multiple of {SUBLANE_MULTIPLE} "
+                "(TPU sublane alignment)")
         if self.prefill_chunk:
             assert self.prefill_chunk > 0, "prefill_chunk must be positive"
             assert self.prefill_chunk <= max_len, (
                 "prefill_chunk larger than max_len never splits a prompt")
             if self.use_pallas:
-                assert self.prefill_chunk % 8 == 0, (
+                assert self.prefill_chunk % SUBLANE_MULTIPLE == 0, (
                     "use_pallas tiles the chunk as the kernel's Q block; "
-                    "prefill_chunk must be a multiple of 8 (TPU sublane "
-                    "alignment)")
+                    "prefill_chunk must be a multiple of "
+                    f"{SUBLANE_MULTIPLE} (TPU sublane alignment)")
 
     def reduced(self, **overrides) -> "ModelConfig":
         """A smoke-test-sized variant of the same family (<=2 layers, d<=512)."""

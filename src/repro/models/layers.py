@@ -1,7 +1,6 @@
 """Common neural-net layers (pure JAX): norms, RoPE, MLPs, embeddings."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ Public entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -22,12 +21,16 @@ import jax.numpy as jnp
 
 from repro.distributed import sharding as shd
 from repro.models import attention as attn_lib
-from repro.models import cache as cache_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models import xlstm as xlstm_lib
-from repro.models.config import (ATTN, MAMBA2, MLSTM, MOE, SHARED_ATTN, SLSTM,
-                                 EncoderConfig, ModelConfig)
+from repro.models.config import (ATTN,
+                                 MAMBA2,
+                                 MLSTM,
+                                 MOE,
+                                 SHARED_ATTN,
+                                 SLSTM,
+                                 ModelConfig)
 from repro.models.layers import (dense_init, embed, embed_init, init_embedding,
                                  init_mlp, init_norm, mlp, norm, unembed)
 

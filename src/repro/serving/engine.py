@@ -537,7 +537,9 @@ class InferenceEngine:
             self.key, sub = jax.random.split(self.key)
             tok = sample(logits, sub, self.sampler)
             lp = token_logprob(logits, tok)
-            self._commit(slot, int(tok[0]), float(lp[0]))
+            # repro-analysis: disable=RA103 reason=admission-time first-token draw; one batched readback, off the decode loop
+            tok_h, lp_h = jax.device_get((tok, lp))
+            self._commit(slot, int(tok_h[0]), float(lp_h[0]))
         return logits
 
     def _prefill_into_chunks(self, slot: int, toks: List[int]):
@@ -744,7 +746,9 @@ class InferenceEngine:
             self.key, sub = jax.random.split(self.key)
             tok = sample(logits, sub, self.sampler)
             lp = token_logprob(logits, tok)
-            self._commit(slot, int(tok[0]), float(lp[0]))
+            # repro-analysis: disable=RA103 reason=admission-time first-token draw; one batched readback, off the decode loop
+            tok_h, lp_h = jax.device_get((tok, lp))
+            self._commit(slot, int(tok_h[0]), float(lp_h[0]))
         # else: the first sample comes after the last suffix/prompt token
         # is ingested
         self.busy_s += time.perf_counter() - t0
@@ -936,6 +940,7 @@ class InferenceEngine:
         logits, self.cache = self._prefill_ragged(
             live, self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(slots), jnp.asarray(offs), jnp.asarray(lens))
+        draws: List[Tuple[int, object, object]] = []
         for r, (i, _, _) in enumerate(rows):
             s = self.slots[i]
             if s.active and not s.prefill_toks:
@@ -945,7 +950,12 @@ class InferenceEngine:
                 self.key, sub = jax.random.split(self.key)
                 tok = sample(logits[r:r + 1], sub, self.sampler)
                 lp = token_logprob(logits[r:r + 1], tok)
-                self._commit(i, int(tok[0]), float(lp[0]))
+                draws.append((i, tok, lp))
+        if draws:
+            # repro-analysis: disable=RA103 reason=one batched readback for every first token finishing this step (was 2 scalar syncs per row)
+            flat = jax.device_get([(t, l) for _, t, l in draws])
+            for (i, _, _), (tok_h, lp_h) in zip(draws, flat):
+                self._commit(i, int(tok_h[0]), float(lp_h[0]))
         return True
 
     def step(self) -> bool:
@@ -1208,6 +1218,7 @@ class InferenceEngine:
         toks = tokens[-S:]
         arr = np.full((S,), self.eos_id, np.int32)
         arr[:len(toks)] = toks
-        mean_lp, gold = self._score(self.params, jnp.asarray(arr))
-        gold = np.asarray(gold)[:max(len(toks) - 1, 1)]
+        _, gold_d = self._score(self.params, jnp.asarray(arr))
+        # repro-analysis: disable=RA103 reason=offline scoring API; the readback is the result, not on the step loop
+        gold = jax.device_get(gold_d)[:max(len(toks) - 1, 1)]
         return float(np.mean(gold)), gold

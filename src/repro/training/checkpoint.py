@@ -7,7 +7,6 @@ dtypes/shapes and validates against a template when given.
 from __future__ import annotations
 
 import json
-import os
 from pathlib import Path
 from typing import Any, Optional
 

@@ -3,11 +3,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Iterator, Optional
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import steps as steps_lib
 from repro.models import transformer
@@ -61,7 +60,9 @@ def train(cfg: ModelConfig, state: TrainState, batches: Iterator,
             state.params, state.opt_state, batch)
         state.step += 1
         if (i + 1) % log_every == 0 or i == n_steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
+            # repro-analysis: disable=RA103 reason=log-interval readback; one transfer per log_every steps instead of one sync per metric
+            metrics_h = jax.device_get(metrics)
+            m = {k: float(v) for k, v in metrics_h.items()}
             log_fn(f"step {state.step:5d} loss={m['loss']:.4f} "
                    f"nll={m.get('nll', 0):.4f} "
                    f"({(time.time()-t0)/(i+1):.3f}s/step)")

@@ -1,0 +1,31 @@
+"""Known-bad Pallas block specs: wrong index_map arity, wrong return rank,
+misaligned literal dims, and a VMEM footprint far over the cap."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, x_ref, y_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def bad_call(x, y):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((8, 12), lambda i, j: (i, j)),         # expect: RA401,RA403
+            pl.BlockSpec((8, 128), lambda i, j, s_ref: (i,)),   # expect: RA402
+        ],
+        out_specs=pl.BlockSpec((4096, 4096),
+                               lambda i, j, s_ref: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((4, 128), jnp.float32),                  # expect: RA403
+        ],
+    )
+    return pl.pallas_call(                                      # expect: RA404
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x, y)

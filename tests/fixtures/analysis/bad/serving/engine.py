@@ -1,0 +1,22 @@
+"""Known-bad donation snippets: the donated cache is neither rebound by the
+donating statement nor left unread afterwards."""
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(cfg, kind):
+    if kind == "decode":
+        return jax.jit(lambda p, c: (p, c), donate_argnums=(1,))
+    return jax.jit(lambda p, c: (p, c))
+
+
+class Engine:
+    def __init__(self, cfg):
+        self._decode = _jitted(cfg, "decode")
+
+    def step(self):
+        toks, _ = self._decode(self.params, self.cache)     # expect: RA301
+        stale = self.cache                                  # expect: RA302
+        return toks, stale

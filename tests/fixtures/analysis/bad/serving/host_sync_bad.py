@@ -1,0 +1,26 @@
+"""Known-bad host-sync snippets. Lines marked `# expect: CODE` are asserted
+by tests/test_analysis.py with their exact line numbers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def leaky_step(x):
+    y = jnp.sum(x)
+    a = float(y)                        # expect: RA101
+    b = y.item()                        # expect: RA101
+    c = np.asarray(y)                   # expect: RA102
+    d = jax.device_get(y)               # expect: RA103
+    y.block_until_ready()               # expect: RA104
+    return a, b, c, d
+
+
+def leaky_loop(xs):
+    outs = jnp.stack(xs)
+    return [int(v) for v in outs]       # expect: RA101
+
+
+def waived_step(x):
+    y = jnp.sum(x)
+    # repro-analysis: disable=RA101 reason=demonstrates a documented waiver
+    return float(y)

@@ -1,0 +1,26 @@
+"""Known-bad recompile-budget snippets (see tests/test_analysis.py)."""
+import jax
+
+
+def _bucket(n):
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def make_step(cfg):                     # expect: RA204
+    return jax.jit(lambda x: x + 1)     # expect: RA202
+
+
+def rogue_jit(x):
+    f = jax.jit(lambda y: y * 2)        # expect: RA202
+    return f(x)
+
+
+class Engine:
+    def score(self, tokens):
+        return _bucket(len(tokens))     # expect: RA201
+
+    def admit(self, req):
+        self._prefill_chunk(len(req.prompt), req.prompt)    # expect: RA203

@@ -1,0 +1,29 @@
+"""Clean Pallas spec: arity matches grid + prefetch, aligned dims, small
+VMEM footprint."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+def good_call(x):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(4, 4),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda i, j, s_ref: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j, *_: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((8, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,34 @@
+"""Clean recompile-budget patterns: clamped buckets, lru_cache registry,
+bucketed static arguments."""
+import functools
+
+import jax
+
+
+def _bucket(n):
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def _chunk_live(n, cap):
+    return min(_bucket(n), cap)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(cfg, kind):
+    if kind == "decode":
+        return jax.jit(lambda x: x)
+    return jax.jit(lambda x: x + 1)
+
+
+class Engine:
+    max_len = 256
+
+    def score(self, tokens):
+        return min(_bucket(len(tokens)), self.max_len)
+
+    def admit(self, req):
+        live = min(_bucket(len(req.prompt)), self.max_len)
+        self._prefill_chunk(live, req.prompt)

@@ -1,0 +1,118 @@
+"""Regression tests for the repro.analysis static checkers.
+
+Bad fixtures under tests/fixtures/analysis/bad/ carry `# expect: CODE[,CODE]`
+markers on the exact line each violation must be reported at; the tests
+assert the reported (file, line, code) set equals the marker set, per pass.
+The good fixture tree and the live src/repro tree must both be clean under
+--strict.
+"""
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import PASSES, package_root, run_all, rules
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.common import SourceFile
+from repro.analysis.rules import SUBLANE_MULTIPLE, parse_pragmas
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+BAD = FIXTURES / "bad"
+GOOD = FIXTURES / "good"
+
+_EXPECT_RE = re.compile(r"#\s*expect:\s*([A-Z0-9,]+)")
+
+
+def _expected(root: Path, code_prefix: str):
+    """(rel_file, line, code) triples from `# expect:` markers, filtered to
+    one pass's code family (RA1, RA2, ...)."""
+    out = set()
+    for p in sorted(root.rglob("*.py")):
+        rel = str(p.relative_to(root))
+        for i, line in enumerate(p.read_text().splitlines(), 1):
+            m = _EXPECT_RE.search(line)
+            if not m:
+                continue
+            for code in m.group(1).split(","):
+                if code.startswith(code_prefix):
+                    out.add((rel, i, code))
+    return out
+
+
+@pytest.mark.parametrize("pass_name,prefix", [
+    ("host-sync", "RA1"),
+    ("recompile", "RA2"),
+    ("donation", "RA3"),
+    ("pallas-spec", "RA4"),
+])
+def test_bad_fixtures_exact_codes_and_lines(pass_name, prefix):
+    found = {(v.file, v.line, v.code)
+             for v in PASSES[pass_name](BAD) if not v.waived}
+    assert found == _expected(BAD, prefix), (
+        f"{pass_name}: reported violations do not match fixture markers")
+
+
+def test_bad_fixture_waiver_is_counted_not_reported():
+    # host_sync_bad.waived_step carries a pragma'd float() sync
+    waived = [v for v in PASSES["host-sync"](BAD) if v.waived]
+    assert len(waived) == 1
+    assert waived[0].code == "RA101"
+    assert "waiver" in waived[0].waive_reason
+
+
+def test_good_fixtures_are_clean():
+    violations = run_all(GOOD)
+    unwaived = [v for v in violations if not v.waived]
+    assert unwaived == [], [v.render() for v in unwaived]
+    # the one deliberate waiver in host_sync_good must carry its reason
+    assert all(v.waive_reason for v in violations if v.waived)
+
+
+def test_live_tree_passes_strict(tmp_path):
+    report = tmp_path / "analysis_report.json"
+    rc = analysis_main(["--strict", "--report", str(report)])
+    assert rc == 0, "src/repro must stay clean under --strict"
+    data = json.loads(report.read_text())
+    assert data["ok"]
+    assert data["counts"]["active"] == 0
+    assert data["counts"]["waived_without_reason"] == 0
+
+
+def test_strict_cli_fails_on_bad_fixtures(tmp_path):
+    rc = analysis_main(["--strict", "--root", str(BAD),
+                        "--report", str(tmp_path / "r.json")])
+    assert rc == 1
+
+
+def test_pragma_parsing():
+    src = (
+        "x = 1\n"
+        "y = float(z)  # repro-analysis: disable=RA101 reason=because\n"
+        "# repro-analysis: disable=RA102,RA103\n"
+        "q = np.asarray(z)\n"
+    )
+    pragmas = parse_pragmas(src)
+    assert pragmas[2] == ({"RA101"}, "because")
+    # a standalone comment waives the following line; no reason given
+    assert pragmas[4] == ({"RA102", "RA103"}, None)
+
+
+def test_sublane_constant_shared_with_validate_paged():
+    from repro.models.config import ModelConfig
+    assert SUBLANE_MULTIPLE == 8
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, use_pallas=True)
+    with pytest.raises(AssertionError):
+        cfg.validate_paged(SUBLANE_MULTIPLE + 4, 240)   # 12: not sublane-aligned
+    cfg.validate_paged(SUBLANE_MULTIPLE * 2, 256)
+
+
+def test_engine_harvest_is_the_only_unwaived_device_get():
+    # the allowlist pins the one-readback-per-step contract to _harvest
+    assert rules.HOST_SYNC_ALLOWLIST == {("serving/engine.py", "_harvest")}
+    engine = package_root() / "serving" / "engine.py"
+    sf = SourceFile.load(engine, package_root())
+    from repro.analysis import host_sync
+    unwaived = [v for v in host_sync.check_file(sf) if not v.waived]
+    assert unwaived == [], [v.render() for v in unwaived]

@@ -1,6 +1,5 @@
 """Unit tests for the PICE core: scheduler Eq.(2), Algorithm 1/2, ensemble
 Eq.(3), execution optimizer, metrics, profiler."""
-import math
 
 import pytest
 

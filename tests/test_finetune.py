@@ -1,5 +1,4 @@
 """Fine-tuning pipeline (§IV-D): preference labeling, reward model, RLAIF."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

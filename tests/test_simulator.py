@@ -1,9 +1,11 @@
 """Calibrated-simulator invariants + paper Table III structural claims."""
 import pytest
 
-from repro.core.simulator import (METHODS, SimConfig, make_requests,
-                                  simulate_cloud_only, simulate_edge_only,
-                                  simulate_pice, simulate_routing)
+from repro.core.simulator import (METHODS,
+                                  SimConfig,
+                                  make_requests,
+                                  simulate_cloud_only,
+                                  simulate_pice)
 
 
 @pytest.fixture(scope="module")

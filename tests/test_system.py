@@ -4,16 +4,10 @@ Trains the tiny cloud + edge models briefly on the synthetic corpus, then
 drives the full progressive pipeline: length prediction -> scheduling ->
 sketch -> dispatch -> parallel edge expansion -> ensemble -> response.
 """
-import jax
 import pytest
 
 pytestmark = pytest.mark.slow        # trains real engines: minutes on CPU
 
-from repro.configs.pice_cloud_edge import TINY_CLOUD, TINY_EDGE_CONFIGS
-from repro.core import metrics as M
-from repro.core.progressive import PICEConfig, PICEPipeline
-from repro.core.scheduler import EdgeModelInfo
-from repro.core.profiler import LatencyModel
 from repro.data import corpus as corpus_lib
 from repro.data import tokenizer as tok
 from repro.launch.serve import build_engines, build_pipeline

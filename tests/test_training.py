@@ -1,10 +1,7 @@
 """Training substrate: loss goes down, checkpoints round-trip, optimizer
 behaviors."""
-import math
-import os
 import tempfile
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
