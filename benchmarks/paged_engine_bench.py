@@ -24,18 +24,33 @@ and the whole trajectory — tokens/s, TTFT p50/p95, per-admission decode
 stall — lands in a machine-readable BENCH_serving.json for future PRs to
 regress against.
 
+Two quantized-KV scenarios A/B a bf16 page pool against int8
+(`cfg.kv_dtype`): slot capacity at a FIXED pool byte budget (int8 must fit
+>= 1.8x the concurrent sequences bf16 does) and per-step KV read traffic on
+the skewed workload (`engine.kv_bytes_read` must shrink >= 1.8x while
+tokens/s stays within 10% of bf16). A swap-vs-replay scenario preempts one
+request at growing generated lengths and times resume-to-next-token under
+both eviction policies — host-tier page swap (`host_swap=True`, promote the
+snapshotted bytes) vs evict-and-replay (recompute the prefill) — reporting
+the crossover length and the modeled edge-link transfer cost of the
+swapped bytes (`NetworkModel.transfer_s`).
+
   PYTHONPATH=src python -m benchmarks.paged_engine_bench [--smoke]
-      [--chunk-sweep] [--out BENCH_serving.json]
+      [--chunk-sweep] [--out BENCH_serving.json] [--timestamp ISO8601]
 
 --smoke shrinks the workloads to a few requests/steps for CI (and leaves
 the sweep to the dedicated step); --chunk-sweep runs only the sweep and
 merges it into an existing BENCH_serving.json rather than clobbering the
-workload/fan-out sections.
+workload/fan-out sections. Every run stamps `meta` with the git SHA,
+jax/jaxlib versions, and a timestamp (--timestamp injects a fixed one so
+CI artifacts are reproducible).
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import subprocess
 import time
 
 import jax
@@ -67,6 +82,27 @@ def _prompts(sampler, seed: int, n_req: int):
     rng = np.random.default_rng(seed)
     return [[int(t) for t in rng.integers(1, 250, size=sampler(rng))]
             for _ in range(n_req)]
+
+
+def _stamp(timestamp: str = ""):
+    """Provenance fields for `meta`: without them a BENCH_serving.json
+    artifact cannot be tied back to the commit/toolchain that produced it
+    when trajectories are compared across PRs."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    try:
+        import jaxlib
+        jaxlib_v = getattr(jaxlib, "__version__", "unknown")
+    except ImportError:
+        jaxlib_v = "unknown"
+    return {"git_sha": sha, "jax_version": jax.__version__,
+            "jaxlib_version": jaxlib_v,
+            "timestamp": timestamp or datetime.datetime.now(
+                datetime.timezone.utc).isoformat(timespec="seconds")}
 
 
 def _pctl(vals, q):
@@ -183,6 +219,204 @@ def _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len, max_new,
     assert out_s == out_u, "fan-out diverged from independent submissions"
     assert peak_s < 0.6 * peak_u, \
         f"fan-out peak {peak_s} not < 0.6 x unshared {peak_u}"
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV pages: slot capacity at fixed bytes + KV read traffic A/B
+# ---------------------------------------------------------------------------
+
+# int8 pages store ~1/4 the bytes of a float32 pool and ~1/2 of bf16 (plus
+# a small f32 scale per (page, kv-head)); both capacity and read-traffic
+# wins must clear this floor or the quantization plumbing has regressed
+MIN_INT8_BF16_RATIO = 1.8
+# int8 decode pays a dequant on every page read; the throughput cost of
+# that must stay within 10% of the bf16 pool on the same workload
+MIN_INT8_TOK_S_RATIO = 0.9
+
+
+def _run_kv_dtype(cfg, params, smoke, results):
+    """bf16 vs int8 KV pools: (a) concurrent slots at a FIXED pool byte
+    budget, (b) per-step KV read bytes + tokens/s on the skewed workload.
+
+    Both engines run the same geometry; only `cfg.kv_dtype` differs, so the
+    per-page byte cost (pool + scale leaves, `engine._page_kv_bytes`) is
+    the only lever. Slot capacity is measured through the real admission
+    path (`can_admit` gates on free pages), not arithmetic on constants."""
+    failures = []
+    engines, page_bytes = {}, {}
+    n_pages_budget = {}
+    # fixed byte budget = what 32 bf16 pages cost; int8 fits more pages
+    for kd in ("bfloat16", "int8"):
+        probe = InferenceEngine(cfg.with_(kv_dtype=kd), params, max_batch=4,
+                                max_len=MAX_LEN, kv_backend="paged",
+                                page_size=PAGE, n_pages=8)
+        page_bytes[kd] = probe._page_kv_bytes
+    budget = 32 * page_bytes["bfloat16"]
+    slot_prompt = [int(t) for t in
+                   np.random.default_rng(7).integers(1, 250, size=60)]
+    slots = {}
+    for kd in ("bfloat16", "int8"):
+        n_pages_budget[kd] = budget // page_bytes[kd]
+        eng = InferenceEngine(cfg.with_(kv_dtype=kd), params, max_batch=32,
+                              max_len=MAX_LEN, kv_backend="paged",
+                              page_size=PAGE, n_pages=int(n_pages_budget[kd]))
+        count = 0
+        while eng.free_slots() and eng.can_admit(len(slot_prompt)):
+            eng.add_request(1000 + count, slot_prompt, max_new=4)
+            count += 1
+        slots[kd] = count
+        engines[kd] = eng
+    slot_ratio = slots["int8"] / max(slots["bfloat16"], 1)
+    print(f"# kv_dtype capacity: {budget} B pool budget -> "
+          f"bf16 {int(n_pages_budget['bfloat16'])} pages / "
+          f"{slots['bfloat16']} slots, int8 {int(n_pages_budget['int8'])} "
+          f"pages / {slots['int8']} slots ({slot_ratio:.2f}x)")
+    emit("paged_engine/kv_dtype_slots", slot_ratio * 100,
+         f"bf16_slots={slots['bfloat16']};int8_slots={slots['int8']}"
+         f";pool_bytes={budget}")
+    if slot_ratio < MIN_INT8_BF16_RATIO:
+        failures.append(
+            f"kv_dtype: int8 fits {slot_ratio:.2f}x the bf16 slots at a "
+            f"fixed pool budget, below the {MIN_INT8_BF16_RATIO} floor")
+
+    # (b) read-traffic A/B on the skewed workload: same prompts, same page
+    # count (same paging behavior), per-page bytes is the only difference
+    n_req, max_new = (6, 8) if smoke else (16, MAX_NEW)
+    prompts = _prompts(WORKLOADS[1][1], seed=131, n_req=n_req)
+    ab = {}
+    for kd in ("bfloat16", "int8"):
+        eng = InferenceEngine(cfg.with_(kv_dtype=kd), params,
+                              max_batch=MAX_BATCH, max_len=MAX_LEN,
+                              kv_backend="paged", page_size=PAGE,
+                              n_pages=int(0.6 * MAX_BATCH * MAX_LEN / PAGE))
+        eng.warmup(prompt_lens=tuple(len(p) for p in prompts))
+        eng.generate([prompts[0]], max_new=4)       # warm remaining glue
+        base_tok, base_bytes = eng.tokens_generated, eng.kv_bytes_read
+        t0 = time.perf_counter()
+        eng.generate(prompts, max_new=max_new)
+        dt = time.perf_counter() - t0
+        ab[kd] = {"tok_s": (eng.tokens_generated - base_tok) / dt,
+                  "kv_bytes_read": eng.kv_bytes_read - base_bytes,
+                  "page_kv_bytes": page_bytes[kd]}
+        emit(f"paged_engine/kv_dtype_{kd}", dt * 1e6,
+             f"tok_s={ab[kd]['tok_s']:.1f}"
+             f";kv_bytes_read={ab[kd]['kv_bytes_read']:.3e}")
+    bytes_ratio = ab["bfloat16"]["kv_bytes_read"] \
+        / max(ab["int8"]["kv_bytes_read"], 1)
+    tok_ratio = ab["int8"]["tok_s"] / ab["bfloat16"]["tok_s"]
+    print(f"# kv_dtype skewed A/B: KV read bytes bf16/int8="
+          f"{bytes_ratio:.2f}x, tok/s int8/bf16={tok_ratio:.2f}")
+    results["kv_dtype"] = {
+        "pool_budget_bytes": budget,
+        "slots_at_fixed_bytes": {"bfloat16": slots["bfloat16"],
+                                 "int8": slots["int8"],
+                                 "ratio": slot_ratio},
+        "skewed_ab": {**{kd: ab[kd] for kd in ab},
+                      "kv_bytes_read_ratio": bytes_ratio,
+                      "tok_s_ratio_int8_bf16": tok_ratio},
+    }
+    if bytes_ratio < MIN_INT8_BF16_RATIO:
+        failures.append(
+            f"kv_dtype: int8 KV read bytes shrink only {bytes_ratio:.2f}x "
+            f"vs bf16, below the {MIN_INT8_BF16_RATIO} floor")
+    if tok_ratio < MIN_INT8_TOK_S_RATIO:
+        failures.append(
+            f"kv_dtype: int8 tok/s is {tok_ratio:.2f}x bf16, below the "
+            f"{MIN_INT8_TOK_S_RATIO} floor")
+    return failures
+
+
+# ---------------------------------------------------------------------------
+# Host-tier page swap vs evict-and-replay resume latency
+# ---------------------------------------------------------------------------
+
+def _swap_cycle(eng, req_id, prompt, gen_before_evict):
+    """Admit -> decode `gen_before_evict` tokens -> preempt -> resume, and
+    time resume-to-next-committed-token under the engine's eviction policy
+    (host_swap demote/promote vs free-and-replay). Returns (resume_s,
+    evict_s, swapped_bytes)."""
+    eng.add_request(req_id, prompt, max_new=gen_before_evict + 2)
+    slot = next(i for i, s in enumerate(eng.slots) if s.req_id == req_id)
+    while eng.slots[slot].generated < gen_before_evict:
+        eng.step()
+    eng._harvest()      # drain the in-flight dispatch: consistent snapshot
+    bytes0 = eng.swap_bytes
+    t0 = time.perf_counter()
+    assert eng._evict_victim(protect=-1)
+    evict_s = time.perf_counter() - t0
+    r = eng._resume_queue.pop(0)
+    n0 = len(r.carry_tokens)
+    t0 = time.perf_counter()
+    if r.swap is not None:
+        slot = eng._admit_swapped(r)
+    else:
+        slot = eng.add_request(r.req_id, r.prompt, r.max_new,
+                               carry_tokens=r.carry_tokens,
+                               carry_lps=r.carry_lps, priority=r.priority)
+    while len(eng.slots[slot].tokens) <= n0:
+        eng.step()
+    resume_s = time.perf_counter() - t0
+    while any(s.active for s in eng.slots):
+        eng.step()
+    return resume_s, evict_s, eng.swap_bytes - bytes0
+
+
+def _run_swap_resume(cfg, params, smoke, results):
+    """Resume latency, host-tier swap vs evict-and-replay, as the victim's
+    decoded length grows. Replay recomputes the whole prefill (cost scales
+    with context); swap re-uploads the quantized page bytes (cost scales
+    with pages, at host-link bandwidth) — swap must win at the largest
+    length and the smallest winning length is reported as the crossover.
+    Runs under kv_dtype=int8 so the swapped payload is the quantized pool
+    (half the bytes bf16 would move). `NetworkModel.transfer_s` prices the
+    same payload over a modeled cloud-edge link for the simulator."""
+    from repro.serving.network import NetworkModel
+    cfg_q = cfg.with_(kv_dtype="int8")
+    prompt = [int(t) for t in
+              np.random.default_rng(17).integers(1, 250, size=96)]
+    gens = [8, 32] if smoke else [8, 32, 96]
+    net = NetworkModel()
+    points = []
+    lat = {}
+    for hs in (True, False):
+        eng = InferenceEngine(cfg_q, params, max_batch=2, max_len=MAX_LEN,
+                              kv_backend="paged", page_size=PAGE,
+                              n_pages=32, eos_id=-1, host_swap=hs)
+        eng.warmup(prompt_lens=(len(prompt),))
+        per_g = {}
+        for gi, g in enumerate(gens):
+            _swap_cycle(eng, 2000 + 10 * gi, prompt, g)   # compile pass
+            per_g[g] = _swap_cycle(eng, 2001 + 10 * gi, prompt, g)
+        lat[hs] = per_g
+    for g in gens:
+        swap_s, _, swapped = lat[True][g]
+        replay_s, _, _ = lat[False][g]
+        # the demotion moved `swapped` bytes out; resume moves them back
+        one_way = swapped // 2
+        points.append({
+            "generated": g, "ctx_len": len(prompt) + g,
+            "resume_swap_s": swap_s, "resume_replay_s": replay_s,
+            "swap_evict_s": lat[True][g][1],
+            "swapped_bytes_one_way": one_way,
+            "modeled_link_transfer_s": net.transfer_s(one_way),
+        })
+        emit(f"paged_engine/swap_resume_g{g}", swap_s * 1e6,
+             f"replay_s={replay_s:.4f};swapped_bytes={one_way}")
+        print(f"# swap-vs-replay g={g}: swap {swap_s * 1e3:.1f} ms vs "
+              f"replay {replay_s * 1e3:.1f} ms "
+              f"({one_way} B, modeled link "
+              f"{net.transfer_s(one_way) * 1e3:.1f} ms)")
+    crossover = next((p["generated"] for p in points
+                      if p["resume_swap_s"] < p["resume_replay_s"]), None)
+    results["swap"] = {"kv_dtype": "int8", "prompt_len": len(prompt),
+                       "points": points,
+                       "crossover_generated": crossover}
+    last = points[-1]
+    if not last["resume_swap_s"] < last["resume_replay_s"]:
+        return [f"swap: resume at generated={last['generated']} took "
+                f"{last['resume_swap_s']:.4f}s, not below replay "
+                f"{last['resume_replay_s']:.4f}s"]
+    return []
 
 
 # ---------------------------------------------------------------------------
@@ -313,14 +547,14 @@ def _run_chunk_sweep(cfg, params, smoke, results):
 
 
 def run(smoke: bool = False, chunk_sweep_only: bool = False,
-        out: str = "BENCH_serving.json"):
+        out: str = "BENCH_serving.json", timestamp: str = ""):
     cfg = TINY_EDGE_A.with_(dtype="float32")
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
     kv_bytes_per_tok = (2 * cfg.n_layers * cfg.n_kv_heads
                        * cfg.resolved_head_dim * 4)
     results = {"meta": {"smoke": smoke, "model": cfg.name,
                         "max_batch": MAX_BATCH, "max_len": MAX_LEN,
-                        "page_size": PAGE},
+                        "page_size": PAGE, **_stamp(timestamp)},
                "workloads": {}}
 
     failures = []
@@ -333,6 +567,8 @@ def run(smoke: bool = False, chunk_sweep_only: bool = False,
                                                                 MAX_NEW)
         _run_fanout(cfg, params, kv_bytes_per_tok, fanout, prefix_len,
                     fan_new, results)
+        failures += _run_kv_dtype(cfg, params, smoke, results)
+        failures += _run_swap_resume(cfg, params, smoke, results)
     if chunk_sweep_only or not smoke:
         # smoke CI splits the sweep into its own step (--chunk-sweep after
         # the fan-out smoke) so the stall measurement is not paid twice
@@ -340,11 +576,14 @@ def run(smoke: bool = False, chunk_sweep_only: bool = False,
 
     if chunk_sweep_only:
         # enrich an existing trajectory instead of clobbering its
-        # workloads/fanout sections (CI writes both from separate steps)
+        # workloads/fanout sections (CI writes both from separate steps);
+        # the provenance stamp is refreshed — it must describe the LAST
+        # writer of the artifact
         try:
             with open(out) as f:
                 prev = json.load(f)
             prev["chunk_sweep"] = results["chunk_sweep"]
+            prev.setdefault("meta", {}).update(_stamp(timestamp))
             results = prev
         except (OSError, ValueError, KeyError):
             pass
@@ -362,5 +601,9 @@ if __name__ == "__main__":
                     help="run only the chunked-prefill stall sweep")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="machine-readable trajectory output path")
+    ap.add_argument("--timestamp", default="",
+                    help="inject a fixed ISO-8601 timestamp into meta "
+                         "(default: current UTC time)")
     args = ap.parse_args()
-    run(smoke=args.smoke, chunk_sweep_only=args.chunk_sweep, out=args.out)
+    run(smoke=args.smoke, chunk_sweep_only=args.chunk_sweep, out=args.out,
+        timestamp=args.timestamp)

@@ -1,4 +1,4 @@
-"""Pass 2 — recompile budget (RA201-RA204).
+"""Pass 2 — recompile budget (RA201-RA205).
 
 The engine's latency contract allows a bounded set of jit shape variants per
 config: prompt/score buffers bucket to powers of two *clamped to max_len*,
@@ -20,6 +20,11 @@ This pass enforces the *syntactic* shape of that contract:
          provenance.
   RA204  a jit registry (a function returning >= 2 jax.jit closures) that is
          not lru_cache-decorated, so every engine instance recompiles.
+  RA205  a jitted entry point taken from a registry (`self.x = _jitted(...)`)
+         that `warmup()` never references — its first call pays its XLA
+         compile inside a serving window, exactly what warmup() exists to
+         front-load. Classes holding registry entries without any warmup()
+         are flagged the same way.
 """
 from __future__ import annotations
 
@@ -149,6 +154,7 @@ def check_file(sf: SourceFile) -> List[Violation]:
     clamped = _self_clamping_helpers(sf.tree)
     in_serving = "serving/" in sf.rel or sf.rel.startswith("serving")
 
+    registries: Set[str] = set()
     for node in ast.walk(sf.tree):
         if isinstance(node, ast.FunctionDef):
             # registry pattern: a function whose RETURN VALUE is a jitted
@@ -159,12 +165,44 @@ def check_file(sf: SourceFile) -> List[Violation]:
                         and dotted(c.func) == "jax.jit"
                         for c in ast.walk(r.value))
                 for r in ast.walk(node) if isinstance(r, ast.Return))
+            if returns_jit:
+                registries.add(node.name)
             if returns_jit and not _has_lru_cache(node):
                 out.append(Violation(
                     file=sf.rel, line=node.lineno, code="RA204",
                     message=f"jit registry `{node.name}` returns jitted "
                             "closures but is not lru_cache-decorated: every "
                             "caller recompiles its variants"))
+
+    # RA205: every registry-held entry point an engine class binds must be
+    # referenced by its warmup() — warmup is the precompile list, and an
+    # unlisted entry pays its first compile inside a serving window
+    for cls in ast.walk(sf.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        warmups = [m for m in cls.body
+                   if isinstance(m, ast.FunctionDef) and m.name == "warmup"]
+        warmed: Set[str] = set()
+        for w in warmups:
+            warmed |= {n.attr for n in ast.walk(w)
+                       if isinstance(n, ast.Attribute)}
+        for node in ast.walk(cls):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)
+                    and dotted(node.value.func).split(".")[-1] in registries):
+                continue
+            for t in node.targets:
+                if not (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self") or t.attr in warmed:
+                    continue
+                why = ("never referenced in warmup()" if warmups
+                       else "the class defines no warmup()")
+                out.append(Violation(
+                    file=sf.rel, line=node.lineno, code="RA205",
+                    message=f"jitted entry point `self.{t.attr}` is not "
+                            f"precompiled: {why} — its first call pays its "
+                            "XLA compile inside the serving window"))
 
     for node in ast.walk(sf.tree):
         if not isinstance(node, ast.Call):

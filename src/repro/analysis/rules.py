@@ -62,6 +62,8 @@ RULES = {
              "instead of a bucketing helper",
     "RA204": "jit registry is not lru_cache-decorated (engines recompile "
              "per instance)",
+    "RA205": "registry-held jitted entry point never referenced in warmup() "
+             "(first call compiles inside a serving window)",
     # donation safety
     "RA301": "donated buffer not reassigned from the donating call's result",
     "RA302": "donated buffer read after the jitted call that consumed it",

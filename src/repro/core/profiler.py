@@ -110,6 +110,10 @@ class RuntimeMonitor:
     kv_pages_shared: int = 0
     kv_pages_logical: int = 0
     kv_evictions: int = 0
+    # tokens one KV page holds (page_size, from observe_engines): converts
+    # the length predictor's queued_expected_tokens into a page-count
+    # forecast for `kv_predicted_utilization`
+    kv_page_tokens: int = 0
 
     def on_enqueue(self, expected_tokens: float):
         self.queue_depth += 1
@@ -154,6 +158,9 @@ class RuntimeMonitor:
                 logical += cur
             total += int(st.get("pages_total", 0))
             ev += int(st.get("evictions", 0))
+            ps = int(getattr(eng, "page_size", 0) or 0)
+            if ps:
+                self.kv_page_tokens = ps
         self.update_memory(used, total, ev, pages_shared=shared,
                            pages_logical=logical)
 
@@ -163,6 +170,22 @@ class RuntimeMonitor:
         if self.kv_pages_total <= 0:
             return 0.0
         return self.kv_pages_used / self.kv_pages_total
+
+    @property
+    def kv_predicted_utilization(self) -> float:
+        """Forecast pool occupancy: current physical pages plus the pages
+        the queue's *predicted* output lengths will demand (the length
+        predictor feeds `queued_expected_tokens` via `on_enqueue`). Equals
+        `kv_utilization` exactly when nothing is queued or no page geometry
+        has been observed, so callers that gate on it reproduce the
+        physical-only behavior in those cases."""
+        if self.kv_pages_total <= 0:
+            return 0.0
+        if self.kv_page_tokens <= 0 or self.queued_expected_tokens <= 0:
+            return self.kv_utilization
+        forecast = -(-self.queued_expected_tokens // self.kv_page_tokens)
+        return min(1.0, (self.kv_pages_used + forecast)
+                   / self.kv_pages_total)
 
     @property
     def kv_shared_fraction(self) -> float:

@@ -72,8 +72,17 @@ class DynamicScheduler:
         The flip side: shared pages cannot be reclaimed by evicting a single
         fork, so when most of the used pool is shared the evictable headroom
         shrinks — rho is nudged toward the logical (unshared-equivalent)
-        load in proportion to the shared fraction."""
-        util = min(self.monitor.kv_utilization, 0.95)
+        load in proportion to the shared fraction.
+
+        rho uses the *predicted* occupancy when it exceeds the physical one:
+        the length predictor's queued_expected_tokens, converted to pages
+        (`kv_predicted_utilization`), anticipates the pool the queued work
+        is about to pin, so Eq.(2) admission tightens BEFORE the pool
+        actually fills instead of reacting to evictions after the fact.
+        With an empty queue (or no page telemetry) the predicted value
+        collapses to the physical one and the seed behavior is unchanged."""
+        util = min(max(self.monitor.kv_utilization,
+                       self.monitor.kv_predicted_utilization), 0.95)
         # non-reclaimable share of the occupancy: at shared_fraction 0 this
         # is plain physical rho; at 1.0 (eviction frees nothing) rho climbs
         # toward saturation by util/2 of the remaining headroom — the extra

@@ -139,3 +139,115 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_table, lengths,
         interpret=interpret,
     )(table, lens, qg, k_pages, v_pages)
     return out.reshape(B, 1, Hq, hd)
+
+
+def _paged_dec_kernel_quant(tbl_ref,           # scalar prefetch: (B, P) pages
+                            len_ref,           # scalar prefetch: (B,) lengths
+                            q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                            m_scr, l_scr, acc_scr,
+                            *, np_: int, ps: int, scale: float):
+    """Quantized-pool variant: identical flash-decode loop, but each page
+    tile is dequantized in VMEM right after the DMA with its streamed
+    per-(page, kv-head) scale scalar — HBM reads stay at the storage dtype
+    width."""
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    page = tbl_ref[b, pi]
+    s_start = pi * ps
+
+    @pl.when((s_start < length) & (page >= 0))
+    def _body():
+        kpos = s_start + jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)
+        valid = kpos < length                       # (ps, 1)
+        q = q_ref[0, 0].astype(jnp.float32)         # (q_per_kv, hd)
+        # dequantize in-VMEM: stale rows past `length` are zeroed before
+        # the MXU, same as the float kernel
+        k = jnp.where(valid,
+                      k_ref[0].astype(jnp.float32)[:, 0] * ks_ref[0, 0], 0.0)
+        v = jnp.where(valid,
+                      v_ref[0].astype(jnp.float32)[:, 0] * vs_ref[0, 0], 0.0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[:, 0][None, :], s, NEG_INF)
+
+        m_prev = m_scr[...][:, 0]
+        l_prev = l_scr[...][:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_prev * alpha + jnp.sum(p, axis=1))[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = l_scr[...][:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_quant_pallas(q, k_pages, v_pages, k_scales,
+                                        v_scales, block_table, lengths,
+                                        *, interpret: bool = True):
+    """`paged_decode_attention_pallas` over a quantized pool.
+
+    k/v_pages: (n_pages, page, Hkv, hd) int8 / fp8; k/v_scales: (n_pages,
+    Hkv) f32 per-(page, kv-head) dequant scales, streamed as (1, 1) blocks
+    through the same clamped block-table index map as their page."""
+    B, _, Hq, hd = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    P = block_table.shape[1]
+    rep = Hq // Hkv
+    table = block_table.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+
+    qg = q[:, 0].reshape(B, Hkv, rep, hd)
+
+    def kv_map(b, h, p, tbl_ref, len_ref):
+        n_live = jax.lax.div(len_ref[b] + ps - 1, ps)
+        pi = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
+        pg = tbl_ref[b, pi]
+        return (jnp.maximum(pg, 0), 0, h, 0)
+
+    def scale_map(b, h, p, tbl_ref, len_ref):
+        # same page clamp as kv_map, on the (n_pages, Hkv) scale tensor
+        n_live = jax.lax.div(len_ref[b] + ps - 1, ps)
+        pi = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
+        pg = tbl_ref[b, pi]
+        return (jnp.maximum(pg, 0), h)
+
+    kernel = functools.partial(_paged_dec_kernel_quant, np_=P, ps=ps,
+                               scale=1.0 / float(hd) ** 0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, h, p, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, 1), scale_map),
+            pl.BlockSpec((1, 1), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda b, h, p, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, hd), q.dtype),
+        interpret=interpret,
+    )(table, lens, qg, k_pages, v_pages, k_scales, v_scales)
+    return out.reshape(B, 1, Hq, hd)

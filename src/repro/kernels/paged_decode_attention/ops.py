@@ -25,3 +25,16 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lengths,
     return _kernel.paged_decode_attention_pallas(
         q, k_pages, v_pages, block_table, lengths,
         interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_quant(q, k_pages, v_pages, k_scales, v_scales,
+                                 block_table, lengths,
+                                 interpret: Optional[bool] = None):
+    """`paged_decode_attention` over an int8/fp8 pool: pages are streamed at
+    the storage width and dequantized in-VMEM with their per-(page, kv-head)
+    scales (k/v_scales: (n_pages, Hkv) f32). Numerics follow the quantized
+    tolerance contract in docs/serving.md, not the bit-exact one."""
+    return _kernel.paged_decode_attention_quant_pallas(
+        q, k_pages, v_pages, k_scales, v_scales, block_table, lengths,
+        interpret=resolve_interpret(interpret))

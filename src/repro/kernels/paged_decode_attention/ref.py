@@ -38,3 +38,28 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lengths):
     out = jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)
     return jnp.where((lengths > 0)[:, None, None, None], out,
                      jnp.zeros_like(out))
+
+
+def paged_decode_attention_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                                     block_table, lengths):
+    """Quantized-pool oracle: dequantize-gather into the contiguous f32
+    layout, then attend exactly as the float oracle. Kernel-vs-this is a
+    reduction-order comparison (tight tolerance); this-vs-the-float-pool
+    oracle is the quantization tolerance contract (docs/serving.md)."""
+    gk = pc.gather_sequence_dequant(k_pages, k_scales, block_table)
+    gv = pc.gather_sequence_dequant(v_pages, v_scales, block_table)
+    B, _, Hq, hd = q.shape
+    Hkv = k_pages.shape[2]
+    rep = Hq // Hkv
+    S = gk.shape[1]
+    k = jnp.repeat(gk, rep, axis=2) if rep > 1 else gk
+    v = jnp.repeat(gv, rep, axis=2) if rep > 1 else gv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale       # (B,Hq,1,S)
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)
+    return jnp.where((lengths > 0)[:, None, None, None], out,
+                     jnp.zeros_like(out)).astype(q.dtype)

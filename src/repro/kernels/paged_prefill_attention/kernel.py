@@ -273,3 +273,228 @@ def paged_prefill_attention_ragged_pallas(q, k_pages, v_pages, block_rows,
     )(rows, info, qg, k_pages, v_pages)
     # (R, Hkv, rep, C, hd) -> (R, C, Hq, hd) with head index h = kv*rep + r
     return jnp.moveaxis(out.reshape(R, Hq, C, hd), 1, 2)
+
+
+def _paged_pref_kernel_quant(row_ref,          # scalar prefetch: (P,) pages
+                             info_ref,         # scalar prefetch: (2,) off,len
+                             q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                             m_scr, l_scr, acc_scr,
+                             *, np_: int, ps: int, C: int, rep: int,
+                             scale: float):
+    """Quantized-pool variant of `_paged_pref_kernel`: each page tile is
+    dequantized in VMEM right after the DMA with its streamed
+    per-(page, kv-head) scale scalar."""
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    total = info_ref[0] + info_ref[1]          # offset + chunk_len
+    page = row_ref[pi]
+    s_start = pi * ps
+
+    @pl.when((s_start < total) & (page >= 0))
+    def _body():
+        kpos = s_start + jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)
+        kvalid = kpos < total                   # (ps, 1)
+        q = q_ref[0].reshape(rep * C, -1).astype(jnp.float32)
+        k = jnp.where(kvalid,
+                      k_ref[0].astype(jnp.float32)[:, 0] * ks_ref[0, 0], 0.0)
+        v = jnp.where(kvalid,
+                      v_ref[0].astype(jnp.float32)[:, 0] * vs_ref[0, 0], 0.0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = info_ref[0] + jax.lax.rem(
+            jax.lax.broadcasted_iota(jnp.int32, (rep * C, 1), 0), C)
+        m = kvalid[:, 0][None, :] & (kpos[:, 0][None, :] <= qpos)
+        s = jnp.where(m, s, NEG_INF)
+
+        m_prev = m_scr[...][:, 0]
+        l_prev = l_scr[...][:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(m, p, 0.0)               # rows with no valid key yet
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_prev * alpha + jnp.sum(p, axis=1))[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = l_scr[...][:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        hd = acc_scr.shape[-1]
+        o_ref[0] = (acc_scr[...] / denom[:, None]).reshape(
+            rep, C, hd).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_quant_pallas(q, k_pages, v_pages, k_scales,
+                                         v_scales, block_row, offset,
+                                         chunk_len, *, interpret: bool = True):
+    """`paged_prefill_attention_pallas` over a quantized pool (k/v_scales:
+    (n_pages, Hkv) f32, streamed as (1, 1) blocks through the same clamped
+    block-row index map as their page)."""
+    _, C, Hq, hd = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    P = block_row.shape[0]
+    rep = Hq // Hkv
+    row = block_row.astype(jnp.int32)
+    info = jnp.stack([jnp.asarray(offset, jnp.int32).reshape(()),
+                      jnp.asarray(chunk_len, jnp.int32).reshape(())])
+
+    qg = jnp.moveaxis(q[0], 1, 0).reshape(Hkv, rep, C, hd)
+
+    def kv_map(h, p, row_ref, info_ref):
+        n_live = jax.lax.div(info_ref[0] + info_ref[1] + ps - 1, ps)
+        pi = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
+        pg = row_ref[pi]
+        return (jnp.maximum(pg, 0), 0, h, 0)
+
+    def scale_map(h, p, row_ref, info_ref):
+        n_live = jax.lax.div(info_ref[0] + info_ref[1] + ps - 1, ps)
+        pi = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
+        pg = row_ref[pi]
+        return (jnp.maximum(pg, 0), h)
+
+    kernel = functools.partial(_paged_pref_kernel_quant, np_=P, ps=ps, C=C,
+                               rep=rep, scale=1.0 / float(hd) ** 0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, rep, C, hd), lambda h, p, *_: (h, 0, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, 1), scale_map),
+            pl.BlockSpec((1, 1), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, rep, C, hd),
+                               lambda h, p, *_: (h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep * C, 1), jnp.float32),
+            pltpu.VMEM((rep * C, 1), jnp.float32),
+            pltpu.VMEM((rep * C, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, rep, C, hd), q.dtype),
+        interpret=interpret,
+    )(row, info, qg, k_pages, v_pages, k_scales, v_scales)
+    return jnp.moveaxis(out.reshape(Hq, C, hd), 0, 1)[None]
+
+
+def _paged_pref_ragged_kernel_quant(rows_ref,  # scalar prefetch: (R, P) pages
+                                    info_ref,  # scalar prefetch: (R, 2)
+                                    q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                                    o_ref, m_scr, l_scr, acc_scr,
+                                    *, np_: int, ps: int, C: int, rep: int,
+                                    scale: float):
+    """Quantized-pool variant of `_paged_pref_ragged_kernel`."""
+    r = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    total = info_ref[r, 0] + info_ref[r, 1]    # offset + chunk_len
+    page = rows_ref[r, pi]
+    s_start = pi * ps
+
+    @pl.when((s_start < total) & (page >= 0))
+    def _body():
+        kpos = s_start + jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)
+        kvalid = kpos < total                   # (ps, 1)
+        q = q_ref[0, 0].reshape(rep * C, -1).astype(jnp.float32)
+        k = jnp.where(kvalid,
+                      k_ref[0].astype(jnp.float32)[:, 0] * ks_ref[0, 0], 0.0)
+        v = jnp.where(kvalid,
+                      v_ref[0].astype(jnp.float32)[:, 0] * vs_ref[0, 0], 0.0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = info_ref[r, 0] + jax.lax.rem(
+            jax.lax.broadcasted_iota(jnp.int32, (rep * C, 1), 0), C)
+        m = kvalid[:, 0][None, :] & (kpos[:, 0][None, :] <= qpos)
+        s = jnp.where(m, s, NEG_INF)
+
+        m_prev = m_scr[...][:, 0]
+        l_prev = l_scr[...][:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(m, p, 0.0)               # rows with no valid key yet
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_prev * alpha + jnp.sum(p, axis=1))[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(pi == np_ - 1)
+    def _finish():
+        l = l_scr[...][:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        hd = acc_scr.shape[-1]
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).reshape(
+            rep, C, hd).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_ragged_quant_pallas(q, k_pages, v_pages, k_scales,
+                                                v_scales, block_rows, offsets,
+                                                lens, *,
+                                                interpret: bool = True):
+    """`paged_prefill_attention_ragged_pallas` over a quantized pool."""
+    R, C, Hq, hd = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    P = block_rows.shape[1]
+    rep = Hq // Hkv
+    rows = block_rows.astype(jnp.int32)
+    info = jnp.stack([jnp.asarray(offsets, jnp.int32),
+                      jnp.asarray(lens, jnp.int32)], axis=1)       # (R, 2)
+
+    qg = jnp.moveaxis(q, 2, 1).reshape(R, Hkv, rep, C, hd)
+
+    def kv_map(r, h, p, rows_ref, info_ref):
+        n_live = jax.lax.div(info_ref[r, 0] + info_ref[r, 1] + ps - 1, ps)
+        pi = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
+        pg = rows_ref[r, pi]
+        return (jnp.maximum(pg, 0), 0, h, 0)
+
+    def scale_map(r, h, p, rows_ref, info_ref):
+        n_live = jax.lax.div(info_ref[r, 0] + info_ref[r, 1] + ps - 1, ps)
+        pi = jnp.minimum(p, jnp.maximum(n_live - 1, 0))
+        pg = rows_ref[r, pi]
+        return (jnp.maximum(pg, 0), h)
+
+    kernel = functools.partial(_paged_pref_ragged_kernel_quant, np_=P, ps=ps,
+                               C=C, rep=rep, scale=1.0 / float(hd) ** 0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R, Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, C, hd), lambda r, h, p, *_: (r, h, 0, 0,
+                                                                  0)),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, 1), scale_map),
+            pl.BlockSpec((1, 1), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, C, hd),
+                               lambda r, h, p, *_: (r, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep * C, 1), jnp.float32),
+            pltpu.VMEM((rep * C, 1), jnp.float32),
+            pltpu.VMEM((rep * C, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Hkv, rep, C, hd), q.dtype),
+        interpret=interpret,
+    )(rows, info, qg, k_pages, v_pages, k_scales, v_scales)
+    return jnp.moveaxis(out.reshape(R, Hq, C, hd), 1, 2)

@@ -46,3 +46,27 @@ def paged_prefill_attention_ragged(q, k_pages, v_pages, block_rows, offsets,
     return _kernel.paged_prefill_attention_ragged_pallas(
         q, k_pages, v_pages, block_rows, offsets, lens,
         interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention_quant(q, k_pages, v_pages, k_scales, v_scales,
+                                  block_row, offset, chunk_len,
+                                  interpret: Optional[bool] = None):
+    """`paged_prefill_attention` over an int8/fp8 pool: pages stream at the
+    storage width and are dequantized in-VMEM with their per-(page, kv-head)
+    scales (k/v_scales: (n_pages, Hkv) f32). Numerics follow the quantized
+    tolerance contract in docs/serving.md, not the bit-exact one."""
+    return _kernel.paged_prefill_attention_quant_pallas(
+        q, k_pages, v_pages, k_scales, v_scales, block_row, offset, chunk_len,
+        interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention_ragged_quant(q, k_pages, v_pages, k_scales,
+                                         v_scales, block_rows, offsets, lens,
+                                         interpret: Optional[bool] = None):
+    """`paged_prefill_attention_ragged` over an int8/fp8 pool (see
+    `paged_prefill_attention_quant`)."""
+    return _kernel.paged_prefill_attention_ragged_quant_pallas(
+        q, k_pages, v_pages, k_scales, v_scales, block_rows, offsets, lens,
+        interpret=resolve_interpret(interpret))

@@ -77,3 +77,61 @@ def paged_prefill_attention_ragged_ref(q, k_pages, v_pages, block_rows,
     logits = jnp.where(mask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)
+
+
+def paged_prefill_attention_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                                      block_row, offset, chunk_len):
+    """Quantized-pool oracle for the single-slot chunk kernel: dequantize-
+    gather into the contiguous f32 layout, then attend exactly as the float
+    oracle (docs/serving.md tolerance contract)."""
+    gk = pc.gather_sequence_dequant(k_pages, k_scales, block_row[None])
+    gv = pc.gather_sequence_dequant(v_pages, v_scales, block_row[None])
+    return _attend_chunk(q, gk, gv, offset, chunk_len).astype(q.dtype)
+
+
+def paged_prefill_attention_ragged_quant_ref(q, k_pages, v_pages, k_scales,
+                                             v_scales, block_rows, offsets,
+                                             lens):
+    """Quantized-pool oracle for the ragged multi-slot chunk kernel."""
+    gk = pc.gather_sequence_dequant(k_pages, k_scales, block_rows)
+    gv = pc.gather_sequence_dequant(v_pages, v_scales, block_rows)
+    R, C, Hq, hd = q.shape
+    Hkv = k_pages.shape[2]
+    rep = Hq // Hkv
+    S = gk.shape[1]
+    k = jnp.repeat(gk, rep, axis=2) if rep > 1 else gk
+    v = jnp.repeat(gv, rep, axis=2) if rep > 1 else gv
+    qpos = offsets[:, None] + jnp.arange(C)[None, :]              # (R, C)
+    kpos = jnp.arange(S)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale            # (R,Hq,C,S)
+    total = (offsets + lens)[:, None, None]                       # (R, 1, 1)
+    mask = ((kpos[None, None, :] <= qpos[:, :, None])
+            & (kpos[None, None, :] < total))[:, None]             # (R,1,C,S)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def _attend_chunk(q, gk, gv, offset, chunk_len):
+    """Causal chunk SDPA over gathered contiguous K/V (shared tail of the
+    single-slot oracles)."""
+    B, C, Hq, hd = q.shape
+    Hkv = gk.shape[2]
+    rep = Hq // Hkv
+    S = gk.shape[1]
+    k = jnp.repeat(gk, rep, axis=2) if rep > 1 else gk
+    v = jnp.repeat(gv, rep, axis=2) if rep > 1 else gv
+    qpos = offset + jnp.arange(C)
+    kpos = jnp.arange(S)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale    # (1,Hq,C,S)
+    total = offset + chunk_len
+    mask = ((kpos[None, :] <= qpos[:, None])
+            & (kpos[None, :] < total))[None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bnqk,bknh->bqnh", probs.astype(v.dtype), v)

@@ -277,13 +277,18 @@ def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
                            k_pages: jax.Array, v_pages: jax.Array,
                            block_table: jax.Array, lengths: jax.Array,
                            live_pages: Optional[int] = None,
-                           active: Optional[jax.Array] = None
-                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                           active: Optional[jax.Array] = None,
+                           k_scales: Optional[jax.Array] = None,
+                           v_scales: Optional[jax.Array] = None):
     """Decode step against a paged KV pool (vLLM-style block table).
 
     x: (B, 1, D); k_pages/v_pages: (n_pages, page, n_kv, hd) this layer's
     pools; block_table: (B, P) page ids (-1 = unmapped); lengths: (B,) tokens
-    already cached per slot. Returns (out, new_k_pages, new_v_pages).
+    already cached per slot. Returns (out, new_k_pages, new_v_pages,
+    new_k_scales, new_v_scales) — the scales are None unless
+    cfg.kv_quantized, in which case k/v_scales: (n_pages, n_kv) f32 are the
+    pool's per-(page, kv-head) dequant scales and the whole path follows the
+    quantized tolerance contract (docs/serving.md) instead of bit-exactness.
 
     live_pages (static) trims the READ width to the first `live_pages`
     block-table columns — callers pass ceil((max(lengths)+1)/page_size),
@@ -308,10 +313,31 @@ def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    k_pages, v_pages = pc.write_token(k_pages, v_pages, block_table, lengths,
-                                      k, v, active=active)
+    dt = x.dtype
     table = block_table if live_pages is None \
         else block_table[:, :live_pages]
+    if cfg.kv_quantized:
+        k_pages, v_pages, k_scales, v_scales = pc.write_token_quant(
+            k_pages, v_pages, k_scales, v_scales, block_table, lengths,
+            k, v, cfg.kv_dtype, active=active)
+        if cfg.use_pallas and T == 1 and not cfg.attn_logit_softcap:
+            from repro.kernels.paged_decode_attention import ops as pda_ops
+            out = pda_ops.paged_decode_attention_quant(
+                q, k_pages, v_pages, k_scales, v_scales, table, lengths + T)
+        else:
+            gk = pc.gather_sequence_dequant(k_pages, k_scales, table)
+            gv = pc.gather_sequence_dequant(v_pages, v_scales, table)
+            Sc = gk.shape[1]
+            ki = jnp.arange(Sc)[None, None, :]
+            qpos = positions[:, :, None]
+            mask = (ki <= qpos)[:, None]
+            out = _grouped_sdpa(q.astype(jnp.float32), gk, gv, mask,
+                                cfg.q_per_kv, cfg.attn_logit_softcap)
+        out = out.astype(dt)
+        out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+        return out, k_pages, v_pages, k_scales, v_scales
+    k_pages, v_pages = pc.write_token(k_pages, v_pages, block_table, lengths,
+                                      k, v, active=active)
     if cfg.use_pallas and T == 1 and not cfg.attn_logit_softcap:
         from repro.kernels.paged_decode_attention import ops as pda_ops
         # the new token was just written at position `lengths`
@@ -326,16 +352,16 @@ def attention_decode_paged(cfg: ModelConfig, params: dict, x: jax.Array,
         mask = (ki <= qpos)[:, None]
         out = _grouped_sdpa(q, gk, gv, mask, cfg.q_per_kv,
                             cfg.attn_logit_softcap)
-    dt = x.dtype
     out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
-    return out, k_pages, v_pages
+    return out, k_pages, v_pages, None, None
 
 
 def attention_prefill_chunk_paged(cfg: ModelConfig, params: dict, x: jax.Array,
                                   k_pages: jax.Array, v_pages: jax.Array,
                                   block_row: jax.Array, offset, chunk_len,
-                                  live_pages: Optional[int] = None
-                                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                                  live_pages: Optional[int] = None,
+                                  k_scales: Optional[jax.Array] = None,
+                                  v_scales: Optional[jax.Array] = None):
     """One prompt chunk against a paged KV pool (chunked prefill).
 
     x: (1, C, D) — C new tokens of ONE slot, right-padded to `chunk_len`
@@ -343,7 +369,9 @@ def attention_prefill_chunk_paged(cfg: ModelConfig, params: dict, x: jax.Array,
     already written for this slot (the chunk's first logical position).
     Writes the chunk's K/V at offset..offset+chunk_len-1, then attends each
     chunk query causally within the chunk AND against everything the slot
-    already holds (ragged cross-chunk read). Returns (out, k_pages, v_pages).
+    already holds (ragged cross-chunk read). Returns (out, k_pages, v_pages,
+    k_scales, v_scales) — scales are None unless cfg.kv_quantized (see
+    attention_decode_paged).
 
     The oracle/fallback reads through the same gather + `_grouped_sdpa`
     formulation as the paged decode step — deliberately: the grouped einsum
@@ -362,9 +390,31 @@ def attention_prefill_chunk_paged(cfg: ModelConfig, params: dict, x: jax.Array,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     from repro.models import paged_cache as pc
+    dt = x.dtype
+    row = block_row if live_pages is None else block_row[:live_pages]
+    if cfg.kv_quantized:
+        k_pages, v_pages, k_scales, v_scales = pc.write_prompt_quant(
+            k_pages, v_pages, k_scales, v_scales, block_row, k, v,
+            chunk_len, cfg.kv_dtype, offset=offset)
+        if cfg.use_pallas and not cfg.attn_logit_softcap:
+            from repro.kernels.paged_prefill_attention import ops as ppa_ops
+            out = ppa_ops.paged_prefill_attention_quant(
+                q, k_pages, v_pages, k_scales, v_scales, row, offset,
+                chunk_len)
+        else:
+            gk = pc.gather_sequence_dequant(k_pages, k_scales, row[None])
+            gv = pc.gather_sequence_dequant(v_pages, v_scales, row[None])
+            Sc = gk.shape[1]
+            ki = jnp.arange(Sc)[None, None, :]
+            qpos = positions[:, :, None]
+            mask = (ki <= qpos)[:, None]
+            out = _grouped_sdpa(q.astype(jnp.float32), gk, gv, mask,
+                                cfg.q_per_kv, cfg.attn_logit_softcap)
+        out = out.astype(dt)
+        out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+        return out, k_pages, v_pages, k_scales, v_scales
     k_pages, v_pages = pc.write_prompt(k_pages, v_pages, block_row, k, v,
                                        chunk_len, offset=offset)
-    row = block_row if live_pages is None else block_row[:live_pages]
     if cfg.use_pallas and not cfg.attn_logit_softcap:
         from repro.kernels.paged_prefill_attention import ops as ppa_ops
         out = ppa_ops.paged_prefill_attention(q, k_pages, v_pages, row,
@@ -378,17 +428,17 @@ def attention_prefill_chunk_paged(cfg: ModelConfig, params: dict, x: jax.Array,
         mask = (ki <= qpos)[:, None]
         out = _grouped_sdpa(q, gk, gv, mask, cfg.q_per_kv,
                             cfg.attn_logit_softcap)
-    dt = x.dtype
     out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
-    return out, k_pages, v_pages
+    return out, k_pages, v_pages, None, None
 
 
 def attention_prefill_ragged_paged(cfg: ModelConfig, params: dict,
                                    x: jax.Array, k_pages: jax.Array,
                                    v_pages: jax.Array, block_rows: jax.Array,
                                    offsets: jax.Array, lens: jax.Array,
-                                   live_pages: Optional[int] = None
-                                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                                   live_pages: Optional[int] = None,
+                                   k_scales: Optional[jax.Array] = None,
+                                   v_scales: Optional[jax.Array] = None):
     """R prompt chunks — one per ingesting slot — against a paged KV pool in
     a single call (batched ragged ingest).
 
@@ -398,8 +448,10 @@ def attention_prefill_ragged_paged(cfg: ModelConfig, params: dict,
     Writes every row's chunk K/V (`pc.write_prompt_ragged` — distinct slots
     own distinct pages, so the scatter is collision-free), then attends each
     row's queries causally within its chunk AND against everything that slot
-    already holds. Returns (out, k_pages, v_pages); row r positions past
-    lens[r] are unspecified, as are padding rows (lens == 0).
+    already holds. Returns (out, k_pages, v_pages, k_scales, v_scales) —
+    scales are None unless cfg.kv_quantized (see attention_decode_paged);
+    row r positions past lens[r] are unspecified, as are padding rows
+    (lens == 0).
 
     Numerics contract: both read paths are row-independent — the oracle is
     the same gather + `_grouped_sdpa` formulation as the single-slot chunk
@@ -415,9 +467,30 @@ def attention_prefill_ragged_paged(cfg: ModelConfig, params: dict,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     from repro.models import paged_cache as pc
+    dt = x.dtype
+    rows = block_rows if live_pages is None else block_rows[:, :live_pages]
+    if cfg.kv_quantized:
+        k_pages, v_pages, k_scales, v_scales = pc.write_prompt_ragged_quant(
+            k_pages, v_pages, k_scales, v_scales, block_rows, k, v, lens,
+            offsets, cfg.kv_dtype)
+        if cfg.use_pallas and not cfg.attn_logit_softcap:
+            from repro.kernels.paged_prefill_attention import ops as ppa_ops
+            out = ppa_ops.paged_prefill_attention_ragged_quant(
+                q, k_pages, v_pages, k_scales, v_scales, rows, offsets, lens)
+        else:
+            gk = pc.gather_sequence_dequant(k_pages, k_scales, rows)
+            gv = pc.gather_sequence_dequant(v_pages, v_scales, rows)
+            Sc = gk.shape[1]
+            ki = jnp.arange(Sc)[None, None, :]
+            qpos = positions[:, :, None]
+            mask = (ki <= qpos)[:, None]
+            out = _grouped_sdpa(q.astype(jnp.float32), gk, gv, mask,
+                                cfg.q_per_kv, cfg.attn_logit_softcap)
+        out = out.astype(dt)
+        out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+        return out, k_pages, v_pages, k_scales, v_scales
     k_pages, v_pages = pc.write_prompt_ragged(k_pages, v_pages, block_rows,
                                               k, v, lens, offsets)
-    rows = block_rows if live_pages is None else block_rows[:, :live_pages]
     if cfg.use_pallas and not cfg.attn_logit_softcap:
         from repro.kernels.paged_prefill_attention import ops as ppa_ops
         out = ppa_ops.paged_prefill_attention_ragged(q, k_pages, v_pages,
@@ -431,9 +504,8 @@ def attention_prefill_ragged_paged(cfg: ModelConfig, params: dict,
         mask = (ki <= qpos)[:, None]
         out = _grouped_sdpa(q, gk, gv, mask, cfg.q_per_kv,
                             cfg.attn_logit_softcap)
-    dt = x.dtype
     out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
-    return out, k_pages, v_pages
+    return out, k_pages, v_pages, None, None
 
 
 def _grouped_sdpa(q, k, v, mask, q_per_kv: int, softcap: float = 0.0):

@@ -97,6 +97,11 @@ class ModelConfig:
     # numerics
     dtype: str = "bfloat16"     # activation/compute dtype
     param_dtype: str = "float32"
+    # Paged KV pool storage dtype: "" follows `dtype` (status quo, bit-exact
+    # paths), "int8"/"fp8" store quantized pages with a per-(page, kv-head)
+    # f32 scale tensor alongside each pool — dequantized on read under a
+    # documented tolerance contract (docs/serving.md).
+    kv_dtype: str = ""
 
     # runtime switches
     use_pallas: bool = False    # use Pallas kernels for attention/norm/scan
@@ -128,6 +133,15 @@ class ModelConfig:
     @property
     def q_per_kv(self) -> int:
         return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def resolved_kv_dtype(self) -> str:
+        """Storage dtype of the paged KV pool ('' tracks the compute dtype)."""
+        return self.kv_dtype if self.kv_dtype else self.dtype
+
+    @property
+    def kv_quantized(self) -> bool:
+        return self.kv_dtype in ("int8", "fp8")
 
     @property
     def is_moe(self) -> bool:
@@ -189,6 +203,9 @@ class ModelConfig:
         from repro.analysis.rules import SUBLANE_MULTIPLE
         assert page_size > 0, "page_size must be positive"
         assert max_len % page_size == 0, "max_len must be page-aligned"
+        assert self.kv_dtype in ("", "float32", "bfloat16", "int8", "fp8"), (
+            f"unsupported kv_dtype {self.kv_dtype!r}; expected one of "
+            "'', 'float32', 'bfloat16', 'int8', 'fp8'")
         if self.use_pallas:
             assert page_size % SUBLANE_MULTIPLE == 0, (
                 "use_pallas streams (page_size, head_dim) page tiles; "

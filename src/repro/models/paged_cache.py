@@ -18,10 +18,48 @@ Layout:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV pages (cfg.kv_dtype in {"int8", "fp8"}).
+#
+# Storage is the quantized pool plus a per-(page, kv-head) f32 scale tensor
+# (n_pages, n_kv). Writes requantize whole pages: dequantize the touched
+# page, overlay the new tokens in f32, recompute abs-max over the valid
+# positions, rescale, and scatter page + scale together. Earlier tokens in
+# a page are therefore re-rounded at most page_size times — a bounded error
+# the tolerance contract in docs/serving.md covers. Reads dequantize either
+# in-VMEM right after the page DMA (Pallas kernels) or via
+# `gather_sequence_dequant` (oracle / non-TPU fallback).
+# ---------------------------------------------------------------------------
+
+KV_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def kv_storage_dtype(kv_dtype: str):
+    """jnp dtype a paged pool stores for a resolved kv_dtype string."""
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8":
+        return jnp.float8_e4m3fn
+    return jnp.dtype(kv_dtype)
+
+
+def quant_scale(amax: jax.Array, kv_dtype: str) -> jax.Array:
+    """Per-(page, kv-head) scale from the abs-max of its valid positions."""
+    return jnp.where(amax > 0, amax / KV_QMAX[kv_dtype], 1.0)
+
+
+def _quantize(x: jax.Array, scale: jax.Array, kv_dtype: str) -> jax.Array:
+    """x: f32 (..., page, kv, hd); scale: (..., kv) -> storage dtype."""
+    y = x / scale[..., None, :, None]
+    if kv_dtype == "int8":
+        return jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+    return y.astype(jnp.float8_e4m3fn)
 
 
 def init_paged_kv(n_layers: int, n_pages: int, page_size: int, n_kv: int,
@@ -47,6 +85,18 @@ def gather_sequence(pages: jax.Array, block_table: jax.Array) -> jax.Array:
     return g.reshape(B, P * page, kv, hd)
 
 
+def gather_sequence_dequant(pages: jax.Array, scales: jax.Array,
+                            block_table: jax.Array) -> jax.Array:
+    """`gather_sequence` for a quantized pool: dequantize per-(page, head)
+    on read, returning contiguous f32 (B, P*page, n_kv, hd). scales:
+    (n_pages, n_kv) f32."""
+    idx = jnp.maximum(block_table, 0)
+    g = pages[idx].astype(jnp.float32)               # (B, P, page, kv, hd)
+    g = g * scales[idx][:, :, None, :, None]
+    B, P, page, kv, hd = g.shape
+    return g.reshape(B, P * page, kv, hd)
+
+
 def write_token(pages_k: jax.Array, pages_v: jax.Array, block_table: jax.Array,
                 lengths: jax.Array, new_k: jax.Array, new_v: jax.Array,
                 active: Optional[jax.Array] = None
@@ -68,8 +118,12 @@ def write_token(pages_k: jax.Array, pages_v: jax.Array, block_table: jax.Array,
     safe_page = jnp.where(page_of < 0, n_pages, page_of)
     if active is not None:
         safe_page = jnp.where(active, safe_page, n_pages)
-    pages_k = pages_k.at[safe_page, off].set(new_k[:, 0], mode="drop")
-    pages_v = pages_v.at[safe_page, off].set(new_v[:, 0], mode="drop")
+    # cast-to-pool is a no-op at the default kv_dtype; kv_dtype="bfloat16"
+    # stores a narrower non-quantized pool than the compute dtype
+    pages_k = pages_k.at[safe_page, off].set(
+        new_k[:, 0].astype(pages_k.dtype), mode="drop")
+    pages_v = pages_v.at[safe_page, off].set(
+        new_v[:, 0].astype(pages_v.dtype), mode="drop")
     return pages_k, pages_v
 
 
@@ -91,8 +145,10 @@ def write_prompt(pages_k: jax.Array, pages_v: jax.Array, block_row: jax.Array,
     valid = (jnp.arange(S) < prompt_len) & (page_of >= 0)
     safe_page = jnp.where(valid, page_of, n_pages)       # OOB rows dropped
     off = pos % page_size
-    pages_k = pages_k.at[safe_page, off].set(new_k[0], mode="drop")
-    pages_v = pages_v.at[safe_page, off].set(new_v[0], mode="drop")
+    pages_k = pages_k.at[safe_page, off].set(
+        new_k[0].astype(pages_k.dtype), mode="drop")
+    pages_v = pages_v.at[safe_page, off].set(
+        new_v[0].astype(pages_v.dtype), mode="drop")
     return pages_k, pages_v
 
 
@@ -120,9 +176,151 @@ def write_prompt_ragged(pages_k: jax.Array, pages_v: jax.Array,
     valid = (jnp.arange(C)[None, :] < lens[:, None]) & (page_of >= 0)
     safe_page = jnp.where(valid, page_of, n_pages)             # OOB dropped
     off = pos % page_size
-    pages_k = pages_k.at[safe_page, off].set(new_k, mode="drop")
-    pages_v = pages_v.at[safe_page, off].set(new_v, mode="drop")
+    pages_k = pages_k.at[safe_page, off].set(
+        new_k.astype(pages_k.dtype), mode="drop")
+    pages_v = pages_v.at[safe_page, off].set(
+        new_v.astype(pages_v.dtype), mode="drop")
     return pages_k, pages_v
+
+
+def write_token_quant(pages_k: jax.Array, pages_v: jax.Array,
+                      scales_k: jax.Array, scales_v: jax.Array,
+                      block_table: jax.Array, lengths: jax.Array,
+                      new_k: jax.Array, new_v: jax.Array, kv_dtype: str,
+                      active: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """`write_token` for a quantized pool: requantize each slot's tail page.
+
+    The tail page is always uniquely owned (COW copies partial tails
+    eagerly), so rewriting the whole page never clobbers a sibling. Garbage
+    positions past the new token are zeroed out of both the abs-max and the
+    stored page."""
+    n_pages, page_size = pages_k.shape[0], pages_k.shape[1]
+    B = lengths.shape[0]
+    pos = lengths
+    page_of = jnp.take_along_axis(block_table, (pos // page_size)[:, None],
+                                  axis=1, mode="clip")[:, 0]    # (B,)
+    off = pos % page_size
+    safe_page = jnp.where(page_of < 0, n_pages, page_of)
+    if active is not None:
+        safe_page = jnp.where(active, safe_page, n_pages)
+    idx = jnp.minimum(safe_page, n_pages - 1)
+    valid = jnp.arange(page_size)[None, :] <= off[:, None]       # (B, page)
+
+    def one(pages, scales, new):
+        deq = pages[idx].astype(jnp.float32)                     # (B, pg, kv, hd)
+        deq = deq * scales[idx][:, None, :, None]
+        deq = deq.at[jnp.arange(B), off].set(new[:, 0].astype(jnp.float32))
+        deq = jnp.where(valid[:, :, None, None], deq, 0.0)
+        amax = jnp.max(jnp.abs(deq), axis=(1, 3))                # (B, kv)
+        scale = quant_scale(amax, kv_dtype)
+        q = _quantize(deq, scale, kv_dtype)
+        pages = pages.at[safe_page].set(q, mode="drop")
+        scales = scales.at[safe_page].set(scale, mode="drop")
+        return pages, scales
+
+    pages_k, scales_k = one(pages_k, scales_k, new_k)
+    pages_v, scales_v = one(pages_v, scales_v, new_v)
+    return pages_k, pages_v, scales_k, scales_v
+
+
+def _quant_chunk_scatter(pages, scales, page_ids, kpos, newg, inchunk, valid,
+                         kv_dtype):
+    """Shared tail of the quantized prompt writes: dequantize the touched
+    pages, overlay the chunk tokens, requantize over valid positions, and
+    scatter pages + scales (rows with nothing to write are dropped).
+
+    pages: (n_pages, pg, kv, hd); scales: (n_pages, kv); page_ids: (T,);
+    kpos: (T, pg) logical positions; newg: (T, pg, kv, hd) f32 chunk tokens
+    aligned to kpos; inchunk/valid: (T, pg) masks."""
+    n_pages = pages.shape[0]
+    idx = jnp.maximum(page_ids, 0)
+    deq = pages[idx].astype(jnp.float32) * scales[idx][:, None, :, None]
+    deq = jnp.where(inchunk[:, :, None, None], newg, deq)
+    deq = jnp.where(valid[:, :, None, None], deq, 0.0)
+    amax = jnp.max(jnp.abs(deq), axis=(1, 3))                    # (T, kv)
+    scale = quant_scale(amax, kv_dtype)
+    q = _quantize(deq, scale, kv_dtype)
+    writes = jnp.any(inchunk, axis=1) & (page_ids >= 0)
+    safe = jnp.where(writes, page_ids, n_pages)
+    pages = pages.at[safe].set(q, mode="drop")
+    scales = scales.at[safe].set(scale, mode="drop")
+    return pages, scales
+
+
+def write_prompt_quant(pages_k: jax.Array, pages_v: jax.Array,
+                       scales_k: jax.Array, scales_v: jax.Array,
+                       block_row: jax.Array, new_k: jax.Array,
+                       new_v: jax.Array, prompt_len: jax.Array, kv_dtype: str,
+                       offset=0
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """`write_prompt` for a quantized pool.
+
+    Touched pages are rewritten whole: tokens earlier chunks already placed
+    on the first touched page are dequantized, merged with the new chunk,
+    and requantized under the page's fresh scale."""
+    n_pages, page_size = pages_k.shape[0], pages_k.shape[1]
+    S = new_k.shape[1]
+    n_touch = S // page_size + 2          # static page-span upper bound
+    first = jnp.asarray(offset, jnp.int32) // page_size
+    logical = first + jnp.arange(n_touch)                        # (T,)
+    page_ids = jnp.take(block_row, logical, mode="clip")
+    kpos = logical[:, None] * page_size + jnp.arange(page_size)[None, :]
+    chunk_idx = kpos - jnp.asarray(offset, jnp.int32)            # (T, pg)
+    inchunk = (chunk_idx >= 0) & (chunk_idx < prompt_len)
+    valid = (kpos < jnp.asarray(offset, jnp.int32) + prompt_len) \
+        & (page_ids >= 0)[:, None]
+    cc = jnp.clip(chunk_idx, 0, S - 1)
+
+    def one(pages, scales, new):
+        newg = new[0].astype(jnp.float32)[cc]                    # (T, pg, kv, hd)
+        return _quant_chunk_scatter(pages, scales, page_ids, kpos, newg,
+                                    inchunk, valid, kv_dtype)
+
+    pages_k, scales_k = one(pages_k, scales_k, new_k)
+    pages_v, scales_v = one(pages_v, scales_v, new_v)
+    return pages_k, pages_v, scales_k, scales_v
+
+
+def write_prompt_ragged_quant(pages_k: jax.Array, pages_v: jax.Array,
+                              scales_k: jax.Array, scales_v: jax.Array,
+                              block_rows: jax.Array, new_k: jax.Array,
+                              new_v: jax.Array, lens: jax.Array,
+                              offsets: jax.Array, kv_dtype: str
+                              ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                         jax.Array]:
+    """`write_prompt_ragged` for a quantized pool: R slots' chunks in one
+    shot. Distinct slots own distinct pages, so the flattened (R * touched)
+    page rewrite never collides across rows and stays order-independent."""
+    n_pages, page_size = pages_k.shape[0], pages_k.shape[1]
+    R, C = new_k.shape[0], new_k.shape[1]
+    n_touch = C // page_size + 2
+    first = offsets // page_size                                  # (R,)
+    logical = first[:, None] + jnp.arange(n_touch)[None, :]       # (R, T)
+    page_ids = jnp.take_along_axis(block_rows, jnp.minimum(
+        logical, block_rows.shape[1] - 1), axis=1)
+    page_ids = jnp.where(logical < block_rows.shape[1], page_ids, -1)
+    kpos = logical[:, :, None] * page_size \
+        + jnp.arange(page_size)[None, None, :]                    # (R, T, pg)
+    chunk_idx = kpos - offsets[:, None, None]
+    inchunk = (chunk_idx >= 0) & (chunk_idx < lens[:, None, None])
+    valid = (kpos < (offsets + lens)[:, None, None]) \
+        & (page_ids >= 0)[:, :, None]
+    cc = jnp.clip(chunk_idx, 0, C - 1).reshape(R, n_touch * page_size)
+
+    def one(pages, scales, new):
+        newg = jnp.take_along_axis(new.astype(jnp.float32),
+                                   cc[:, :, None, None], axis=1)
+        newg = newg.reshape(R * n_touch, page_size, *new.shape[2:])
+        return _quant_chunk_scatter(
+            pages, scales, page_ids.reshape(-1),
+            kpos.reshape(R * n_touch, page_size), newg,
+            inchunk.reshape(R * n_touch, page_size),
+            valid.reshape(R * n_touch, page_size), kv_dtype)
+
+    pages_k, scales_k = one(pages_k, scales_k, new_k)
+    pages_v, scales_v = one(pages_v, scales_v, new_v)
+    return pages_k, pages_v, scales_k, scales_v
 
 
 def copy_page(pages: jax.Array, src: int, dst: int) -> jax.Array:
@@ -147,6 +345,12 @@ class PageAllocator:
         self.free: List[int] = list(range(self.n_pages))
         self.owned: dict = {}
         self.refcount: List[int] = [0] * self.n_pages
+        # Host tier: req_id -> {"resident": [(logical_idx, page_id)],
+        # "swapped_idx": [logical_idx]}. Demoted requests keep shared pages
+        # resident (their reference is held, so siblings can't free them)
+        # and surrender uniquely-owned pages to the free list once the
+        # engine has snapshotted their bytes to host memory.
+        self.hosted: Dict = {}
 
     def _take(self) -> int:
         p = self.free.pop()
@@ -227,6 +431,61 @@ class PageAllocator:
         self.refcount[p] -= 1
         pages[idx] = new
         return p, new
+
+    def demote(self, slot: int, req_id) -> List[Tuple[int, int]]:
+        """Move a slot's chain to the host tier instead of freeing it.
+
+        Uniquely-owned pages are freed for reuse and listed as swapped —
+        the caller must snapshot their bytes from the *current* (immutable)
+        cache value before dispatching anything that could rewrite them.
+        Shared pages stay resident with this chain's reference held, so COW
+        siblings cannot free them and `promote` re-shares them in place.
+        Returns [(logical_idx, page_id)] for the swapped pages."""
+        pages = self.owned.pop(slot)
+        resident: List[Tuple[int, int]] = []
+        swapped: List[Tuple[int, int]] = []
+        for i, p in enumerate(pages):
+            if self.refcount[p] == 1:
+                swapped.append((i, p))
+                self.refcount[p] = 0
+                self.free.append(p)
+            else:
+                resident.append((i, p))
+        self.hosted[req_id] = {"resident": resident,
+                               "swapped_idx": [i for i, _ in swapped]}
+        return swapped
+
+    def promote(self, req_id, slot: int) -> List[Tuple[int, int]]:
+        """Re-admit a demoted request into `slot`: fresh device pages for
+        the swapped logical indices (MemoryError when the pool is dry),
+        resident shared pages rejoin the chain with their held reference.
+        Returns [(logical_idx, new_page_id)] upload targets for the host
+        bytes, in logical order."""
+        ent = self.hosted[req_id]
+        assert slot not in self.owned, "destination slot still owns pages"
+        if len(self.free) < len(ent["swapped_idx"]):
+            raise MemoryError("page pool exhausted")
+        uploads = [(i, self._take()) for i in ent["swapped_idx"]]
+        chain = dict(uploads)
+        chain.update(ent["resident"])
+        self.owned[slot] = [chain[i] for i in sorted(chain)]
+        del self.hosted[req_id]
+        return uploads
+
+    def drop_hosted(self, req_id) -> None:
+        """Abandon a demoted request, releasing its held resident refs."""
+        ent = self.hosted.pop(req_id, None)
+        if ent is None:
+            return
+        for _, p in ent["resident"]:
+            self.refcount[p] -= 1
+            assert self.refcount[p] >= 0, "refcount underflow"
+            if self.refcount[p] == 0:
+                self.free.append(p)
+
+    def hosted_pages(self, req_id) -> int:
+        """Swapped page count a promote of req_id must allocate."""
+        return len(self.hosted[req_id]["swapped_idx"])
 
     def release(self, slot: int) -> None:
         for p in self.owned.pop(slot, []):

@@ -560,21 +560,33 @@ def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
       k_pages/v_pages: (count, n_pages, page_size, n_kv, hd)
       block_table:     (batch, max_pages_per_seq) int32, -1 = unmapped
       lengths:         (batch,)
+
+    cfg.kv_quantized stores the pools at the int8/fp8 storage dtype and adds
+    per-(page, kv-head) f32 scale leaves k_scale/v_scale: (count, n_pages,
+    n_kv), initialized to ones so unwritten pages dequantize to zeros.
     """
     _check_paged_support(cfg)
+    from repro.models import paged_cache as pc
     hd = cfg.resolved_head_dim
-    adt = jnp.dtype(cfg.dtype)
+    adt = pc.kv_storage_dtype(cfg.resolved_kv_dtype)
     mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if spec else (
         lambda sh, dt: jnp.zeros(sh, dt))
     segs = []
     for kind, count in segments_of(cfg):
         if kind in (ATTN, MOE, SHARED_ATTN):
-            segs.append({
+            seg = {
                 "k_pages": mk((count, n_pages, page_size, cfg.n_kv_heads, hd),
                               adt),
                 "v_pages": mk((count, n_pages, page_size, cfg.n_kv_heads, hd),
                               adt),
-            })
+            }
+            if cfg.kv_quantized:
+                sh = (count, n_pages, cfg.n_kv_heads)
+                seg["k_scale"] = (mk(sh, jnp.float32) if spec
+                                  else jnp.ones(sh, jnp.float32))
+                seg["v_scale"] = (mk(sh, jnp.float32) if spec
+                                  else jnp.ones(sh, jnp.float32))
+            segs.append(seg)
         else:
             segs.append(_seg_cache(cfg, kind, count, batch, 0, spec))
     table = (jax.ShapeDtypeStruct((batch, max_pages_per_seq), jnp.int32)
@@ -601,6 +613,12 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     x = _constrain(cfg, mesh, x)
 
     def paged_writer(c, k, v):
+        if cfg.kv_quantized:
+            pk, pv, ks, vs = pc.write_prompt_quant(
+                c["k_pages"], c["v_pages"], c["k_scale"], c["v_scale"],
+                block_row, k, v, plen, cfg.kv_dtype)
+            return {"k_pages": pk, "v_pages": pv, "k_scale": ks,
+                    "v_scale": vs}
         pk, pv = pc.write_prompt(c["k_pages"], c["v_pages"], block_row,
                                  k, v, plen)
         return {"k_pages": pk, "v_pages": pv}
@@ -674,12 +692,15 @@ def prefill_chunk_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
     def block(x, blk, c, kind):
         xin = norm(cfg, blk["norm1"], x)
-        h, nk, nv = attn_lib.attention_prefill_chunk_paged(
+        h, nk, nv, nks, nvs = attn_lib.attention_prefill_chunk_paged(
             cfg, blk["attn"], xin, c["k_pages"], c["v_pages"], block_row,
-            off, clen, live_pages=live_pages)
+            off, clen, live_pages=live_pages,
+            k_scales=c.get("k_scale"), v_scales=c.get("v_scale"))
         x = x + h
-        return _prefill_block_tail(cfg, kind, blk, x,
-                                   {"k_pages": nk, "v_pages": nv}, None, mesh)
+        newc = {"k_pages": nk, "v_pages": nv}
+        if nks is not None:
+            newc["k_scale"], newc["v_scale"] = nks, nvs
+        return _prefill_block_tail(cfg, kind, blk, x, newc, None, mesh)
 
     new_segs = []
     for (kind, count), seg, segc in zip(segments_of(cfg), params["segments"],
@@ -742,12 +763,15 @@ def prefill_ragged_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
     def block(x, blk, c, kind):
         xin = norm(cfg, blk["norm1"], x)
-        h, nk, nv = attn_lib.attention_prefill_ragged_paged(
+        h, nk, nv, nks, nvs = attn_lib.attention_prefill_ragged_paged(
             cfg, blk["attn"], xin, c["k_pages"], c["v_pages"], block_rows,
-            offsets, lens, live_pages=live_pages)
+            offsets, lens, live_pages=live_pages,
+            k_scales=c.get("k_scale"), v_scales=c.get("v_scale"))
         x = x + h
-        return _prefill_block_tail(cfg, kind, blk, x,
-                                   {"k_pages": nk, "v_pages": nv}, None, mesh)
+        newc = {"k_pages": nk, "v_pages": nv}
+        if nks is not None:
+            newc["k_scale"], newc["v_scale"] = nks, nvs
+        return _prefill_block_tail(cfg, kind, blk, x, newc, None, mesh)
 
     new_segs = []
     for (kind, count), seg, segc in zip(segments_of(cfg), params["segments"],
@@ -853,12 +877,20 @@ def fork_slot_paged(cfg: ModelConfig, cache: dict, src_slot, dst_slot,
     new_segs = []
     for (kind, count), segc in zip(segments_of(cfg), cache["segments"]):
         if kind in (ATTN, MOE, SHARED_ATTN):
-            new_segs.append({
+            seg = {
                 "k_pages": pc.copy_page(segc["k_pages"], tail_src_page,
                                         tail_dst_page),
                 "v_pages": pc.copy_page(segc["v_pages"], tail_src_page,
                                         tail_dst_page),
-            })
+            }
+            if "k_scale" in segc:
+                # copy_page is generic over (count, n_pages, ...) leaves, so
+                # the tail page's dequant scales ride the same op
+                seg["k_scale"] = pc.copy_page(segc["k_scale"], tail_src_page,
+                                              tail_dst_page)
+                seg["v_scale"] = pc.copy_page(segc["v_scale"], tail_src_page,
+                                              tail_dst_page)
+            new_segs.append(seg)
         else:
             new_segs.append(jax.tree.map(
                 lambda a: a.at[:, dst_slot].set(a[:, src_slot]), segc))
@@ -867,15 +899,52 @@ def fork_slot_paged(cfg: ModelConfig, cache: dict, src_slot, dst_slot,
             "segments": new_segs}
 
 
+def promote_slot_paged(cfg: ModelConfig, cache: dict, upload_ids,
+                       payloads, slot, ctx_len) -> dict:
+    """Swap-in (host-tier promote): scatter a demoted request's snapshotted
+    pages back into every attention segment's pool and restore its cached
+    length, so decode re-enters directly — no replay.
+
+    upload_ids: (U,) int32 physical page targets, padded with n_pages
+    (dropped); payloads: one dict per attention segment holding k_pages/
+    v_pages (count, U, page, n_kv, hd) at the pool's storage dtype (plus
+    k_scale/v_scale (count, U, n_kv) for quantized pools); slot/ctx_len:
+    traced scalars. The block table is pushed separately by the engine's
+    host mirror. Swap is gated to attention-only stacks (recurrent segments
+    would need their dense states snapshotted too), so non-attention
+    segments pass through untouched."""
+    _check_paged_support(cfg)
+    new_segs = []
+    pi = 0
+    for (kind, count), segc in zip(segments_of(cfg), cache["segments"]):
+        if kind in (ATTN, MOE, SHARED_ATTN):
+            pay = payloads[pi]
+            pi += 1
+            new_segs.append({
+                key: segc[key].at[:, upload_ids].set(
+                    pay[key].astype(segc[key].dtype), mode="drop")
+                for key in segc
+            })
+        else:
+            new_segs.append(segc)
+    lengths = cache["lengths"].at[slot].set(
+        jnp.asarray(ctx_len, jnp.int32))
+    return {"lengths": lengths, "block_table": cache["block_table"],
+            "segments": new_segs}
+
+
 def _decode_block_paged(cfg: ModelConfig, kind: str, blk: dict, c: dict, x,
                         lengths, table, mesh=None,
                         live_pages: Optional[int] = None, active=None):
     xin = norm(cfg, blk["norm1"], x)
-    h, nk, nv = attn_lib.attention_decode_paged(
+    h, nk, nv, nks, nvs = attn_lib.attention_decode_paged(
         cfg, blk["attn"], xin, c["k_pages"], c["v_pages"], table, lengths,
-        live_pages=live_pages, active=active)
+        live_pages=live_pages, active=active,
+        k_scales=c.get("k_scale"), v_scales=c.get("v_scale"))
     x = x + h
     newc = {"k_pages": nk, "v_pages": nv}
+    if nks is not None:
+        newc["k_scale"], newc["v_scale"] = nks, nvs
     if kind == MOE:
         h, _ = moe_lib.moe_fwd(cfg, blk["moe"], norm(cfg, blk["norm2"], x),
                                mesh=mesh)

@@ -51,6 +51,15 @@ def _bucket(n: int, lo: int = 32) -> int:
     return b
 
 
+def _pow2_bucket(n: int, hi: int) -> int:
+    """Power-of-two bucket from 1, clamped to `hi` — upload widths (swap
+    promote) and other small counts whose jit variants must stay bounded."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, hi)
+
+
 # ---------------------------------------------------------------------------
 # Jitted entry points, shared across engine instances. ModelConfig is a
 # frozen dataclass (hashable), so engines with the same config — the edge
@@ -110,6 +119,11 @@ def _prefill_ragged_fn(cfg, live_pages, params, tokens, cache, slots, offsets,
     return transformer.prefill_ragged_paged(cfg, params, tokens, cache, slots,
                                             offsets, lens,
                                             live_pages=live_pages)
+
+
+def _promote_fn(cfg, cache, upload_ids, payloads, slot, ctx_len):
+    return transformer.promote_slot_paged(cfg, cache, upload_ids, payloads,
+                                          slot, ctx_len)
 
 
 # The "run" half of the plan/run decode step: model step + PRNG split +
@@ -175,6 +189,12 @@ def _jitted(cfg: ModelConfig, kind: str,
         # variants are bounded by log2(max_batch) x log2(live widths)
         return jax.jit(functools.partial(_prefill_ragged_fn, cfg),
                        static_argnums=(0,), donate_argnums=(3,))
+    if kind == "promote":
+        # swap-in scatter (host-tier resume): the upload width U is a shape
+        # the engine buckets with _pow2_bucket, so variants are bounded by
+        # log2(pages_per_seq) per config
+        return jax.jit(functools.partial(_promote_fn, cfg),
+                       donate_argnums=(0,))
     if kind == "fork":
         return jax.jit(functools.partial(transformer.fork_slot_paged, cfg),
                        donate_argnums=(0,))
@@ -246,6 +266,12 @@ class _Resume:
     share_from: int = -1
     suffix: List[int] = dataclasses.field(default_factory=list)
     priority: int = 0
+    # host-tier swap payload (paged backend, host_swap): the victim's page
+    # bytes (+ quant scales) snapshotted at demotion, one dict per attention
+    # segment, plus the slot state a promote restores verbatim. Non-None
+    # routes admission through `_admit_swapped` (single-upload promote and
+    # direct decode re-entry) instead of a prefill replay.
+    swap: Optional[dict] = None
 
 
 class InferenceEngine:
@@ -256,7 +282,7 @@ class InferenceEngine:
                  eos_id: int = 0, name: str = "engine",
                  kv_backend: str = "dense", page_size: int = 32,
                  n_pages: Optional[int] = None, prefix_sharing: bool = True,
-                 ragged_ingest: bool = True):
+                 ragged_ingest: bool = True, host_swap: bool = True):
         assert kv_backend in ("dense", "paged"), kv_backend
         self.cfg = cfg
         self.params = params
@@ -304,6 +330,16 @@ class InferenceEngine:
         self._pending_decode: Optional[Tuple[List[int], jax.Array,
                                              jax.Array]] = None
         self._table_dirty = False
+        # host-tier swap telemetry (paged backend, host_swap)
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swap_bytes = 0         # host<->device bytes moved by swaps
+        # decode/ingest KV read traffic in bytes (pages touched per step x
+        # per-page pool+scale bytes): the signal the kv_dtype A/B benches
+        # compare — int8 pools shrink it ~2x against bf16
+        self.kv_bytes_read = 0
+        self._page_kv_bytes = 0
+        self.host_swap = False
 
         if kv_backend == "paged":
             cfg.validate_paged(page_size, max_len)
@@ -330,7 +366,28 @@ class InferenceEngine:
             if self.prefill_chunk:
                 self._prefill_chunk = _jitted(cfg, "prefill_chunk")
                 self._prefill_ragged = _jitted(cfg, "prefill_ragged")
+            # host-tier page swap (demote on eviction, promote on resume)
+            # rides the same attention-only gate as chunked prefill:
+            # recurrent segments would need their dense scan states
+            # snapshotted too, so those families keep evict-and-replay
+            self.host_swap = host_swap and chunkable
+            if self.host_swap:
+                self._promote = _jitted(cfg, "promote")
+            # bytes one physical page contributes across every attention
+            # segment's pool + scale leaves (drives kv_bytes_read)
+            per_page = 0
+            for seg in self.cache["segments"]:
+                if "k_pages" not in seg:
+                    continue
+                for k in seg:
+                    n = seg[k].shape[0] * seg[k].dtype.itemsize
+                    for d in seg[k].shape[2:]:
+                        n *= d
+                    per_page += n
+            self._page_kv_bytes = per_page
         else:
+            assert not cfg.kv_quantized, \
+                "kv_dtype quantization needs the paged backend"
             self.cache = transformer.init_cache(cfg, max_batch, max_len)
             self._decode_run = _jitted(cfg, "decode_run", sampler)
             self._prefill = _jitted(cfg, "prefill")
@@ -410,22 +467,57 @@ class InferenceEngine:
                 key=lambda i: (self.slots[i].priority,
                                -self.slots[i].arrival))
         s = self.slots[v]
-        # release only frees the victim's *unique* pages (refcounted), never
-        # prefix pages its siblings still read. A fork whose prefix is still
-        # parked resumes through the fork path (replaying suffix + generated
-        # tokens through decode rebuilds bit-identical KV without a second
-        # prefix prefill); otherwise s.prompt holds the full prefix+suffix
-        # for a monolithic resume.
-        refork = (0 <= s.fork_src < self.max_batch
-                  and self.slots[s.fork_src].parked)
-        self._resume_queue.append(_Resume(
-            req_id=s.req_id, prompt=list(s.prompt),
-            max_new=s.max_new, carry_tokens=list(s.tokens),
-            carry_lps=list(s.logprobs),
-            share_from=s.fork_src if refork else -1,
-            suffix=list(s.suffix) if refork else [],
-            priority=s.priority))
-        self._release_slot_pages(v)
+        if self.host_swap:
+            # demote instead of free-and-replay: the victim's uniquely-owned
+            # pages move to the host tier as raw storage bytes (+ quant
+            # scales), shared prefix pages stay resident with a held
+            # reference (COW siblings cannot free them). Resume promotes
+            # the bytes back with one scatter and decode re-enters directly
+            # — no prefill replay and no PRNG draw; the restore is
+            # byte-exact, so greedy continuations are bit-identical to an
+            # uninterrupted run.
+            swapped = self.alloc.demote(v, s.req_id)
+            ids = np.asarray([p for _, p in swapped], np.int32)
+            # snapshot from the CURRENT (immutable) cache value: the last
+            # dispatch that wrote these pages was harvested at step start,
+            # and demote's freed ids cannot be re-written before the next
+            # dispatch, which this plan phase precedes
+            # repro-analysis: disable=RA103 reason=eviction swap-out snapshot; one batched readback per demotion, off the decode hot loop
+            host = jax.device_get(
+                [{k: seg[k][:, ids] for k in seg}
+                 for seg in self.cache["segments"] if "k_pages" in seg])
+            self.swap_outs += 1
+            self.swap_bytes += sum(a.nbytes for seg in host
+                                   for a in seg.values())
+            self._resume_queue.append(_Resume(
+                req_id=s.req_id, prompt=list(s.prompt),
+                max_new=s.max_new, carry_tokens=list(s.tokens),
+                carry_lps=list(s.logprobs), priority=s.priority,
+                swap={"host": host, "ctx_len": s.ctx_len,
+                      "pending": list(s.pending),
+                      "prefill_toks": list(s.prefill_toks),
+                      "fork_src": s.fork_src, "suffix": list(s.suffix),
+                      "truncated": s.truncated}))
+            self.block_table[v, :] = -1
+            self._mark_table_dirty()
+        else:
+            # release only frees the victim's *unique* pages (refcounted),
+            # never prefix pages its siblings still read. A fork whose
+            # prefix is still parked resumes through the fork path
+            # (replaying suffix + generated tokens through decode rebuilds
+            # bit-identical KV without a second prefix prefill); otherwise
+            # s.prompt holds the full prefix+suffix for a monolithic
+            # resume.
+            refork = (0 <= s.fork_src < self.max_batch
+                      and self.slots[s.fork_src].parked)
+            self._resume_queue.append(_Resume(
+                req_id=s.req_id, prompt=list(s.prompt),
+                max_new=s.max_new, carry_tokens=list(s.tokens),
+                carry_lps=list(s.logprobs),
+                share_from=s.fork_src if refork else -1,
+                suffix=list(s.suffix) if refork else [],
+                priority=s.priority))
+            self._release_slot_pages(v)
         s.active, s.evicted, s.req_id = False, True, -1
         s.pending, s.fork_src, s.suffix = [], -1, []
         s.prefill_toks = []     # a mid-prefill victim restarts its chunks
@@ -474,6 +566,67 @@ class InferenceEngine:
         full_shared = src.ctx_len // self.page_size
         need = -(-total // self.page_size) - full_shared
         return len(self.alloc.free) >= need
+
+    def can_admit_swap(self, req_id: int) -> bool:
+        """Admission check for a demoted request: a free batch row plus
+        enough free pages to re-house every swapped page (resident shared
+        pages are already held by the hosted entry)."""
+        if not self.free_slots():
+            return False
+        return len(self.alloc.free) >= self.alloc.hosted_pages(req_id)
+
+    def _admit_swapped(self, r: _Resume) -> int:
+        """Re-admit a demoted request by promoting its host-tier pages:
+        allocate fresh device pages, upload the snapshotted bytes in ONE
+        scatter (`promote_slot_paged`, upload width bucketed), rebuild the
+        block-table row, and restore the slot so the next step's decode
+        continues from the last sampled token. Versus the replay path this
+        trades a host->device transfer of the swapped bytes for the whole
+        prefill recompute (see docs/serving.md for the crossover)."""
+        slot = self.free_slots()[0]
+        t0 = time.perf_counter()
+        self._t_admit.setdefault(r.req_id, t0)
+        self._prune_admit_stamps()
+        uploads = self.alloc.promote(r.req_id, slot)    # MemoryError if dry
+        chain = self.alloc.owned[slot]
+        self.block_table[slot, :] = -1
+        self.block_table[slot, :len(chain)] = chain
+        self._mark_table_dirty()
+        sw = r.swap
+        U = _pow2_bucket(max(len(uploads), 1), self.pages_per_seq)
+        ids = np.full((U,), self.n_pages, np.int32)     # padding ids drop
+        ids[:len(uploads)] = [p for _, p in uploads]
+        payloads = []
+        for seg in sw["host"]:
+            pay = {}
+            for k, arr in seg.items():
+                buf = np.zeros((arr.shape[0], U) + arr.shape[2:], arr.dtype)
+                buf[:, :arr.shape[1]] = arr
+                pay[k] = jnp.asarray(buf)
+            payloads.append(pay)
+        self.cache = self._promote(
+            self.cache, jnp.asarray(ids), payloads,
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(sw["ctx_len"], jnp.int32))
+        self.swap_ins += 1
+        self.swap_bytes += sum(a.nbytes for seg in sw["host"]
+                               for a in seg.values())
+        s = self.slots[slot]
+        s.req_id, s.active = r.req_id, True
+        s.prompt = list(r.prompt)
+        s.tokens, s.logprobs = list(r.carry_tokens), list(r.carry_lps)
+        s.max_new, s.generated = r.max_new, len(r.carry_tokens)
+        s.ctx_len = sw["ctx_len"]
+        s.pending = list(sw["pending"])
+        s.prefill_toks = list(sw["prefill_toks"])
+        s.fork_src, s.suffix = sw["fork_src"], list(sw["suffix"])
+        s.evicted, s.priority = False, r.priority
+        s.truncated = sw["truncated"]
+        s.arrival = self._arrivals
+        self._arrivals += 1
+        self._track_peak()
+        self.busy_s += time.perf_counter() - t0
+        return slot
 
     def _live_pages(self, active: List[int]) -> int:
         """Static read width for this decode step: enough block-table
@@ -889,6 +1042,12 @@ class InferenceEngine:
         needed to keep `self.key`'s split stream identical to the eager
         loop's."""
         if self.kv_backend == "paged":
+            # KV read traffic this step: mapped pages per active slot times
+            # per-page pool+scale bytes (repeated-block DMAs past the live
+            # range are elided by the kernel's clamped index_map)
+            self.kv_bytes_read += self._page_kv_bytes * sum(
+                -(-self.slots[i].ctx_len // self.page_size)
+                for i in plan.active_ids)
             toks, lps, self.key, self.cache = self._decode_run(
                 plan.live, self.params, jnp.asarray(plan.last), self.cache,
                 jnp.asarray(plan.mask), self.key)
@@ -937,6 +1096,9 @@ class InferenceEngine:
             slots[r], offs[r], lens[r] = i, off, len(chunk)
         live = self._chunk_live(max(off + len(chunk)
                                     for _, off, chunk in rows))
+        self.kv_bytes_read += self._page_kv_bytes * sum(
+            -(-(off + len(chunk)) // self.page_size)
+            for _, off, chunk in rows)
         logits, self.cache = self._prefill_ragged(
             live, self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(slots), jnp.asarray(offs), jnp.asarray(lens))
@@ -1089,6 +1251,32 @@ class InferenceEngine:
                         self.cache, jnp.asarray(0, jnp.int32),
                         jnp.asarray(0, jnp.int32))
                     count += 1
+            # fork/COW page copy: one shape variant total (src == dst is a
+            # value no-op on an idle engine)
+            self.cache = self._fork(
+                self.cache, jnp.asarray(0, jnp.int32),
+                jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+                jnp.asarray(0, jnp.int32))
+            count += 1
+            if self.host_swap:
+                # swap-in (promote) variants: one per upload-width bucket.
+                # Padding page ids (n_pages) drop every pool write and the
+                # out-of-range slot drops the lengths write, so warm
+                # promotes are state no-ops.
+                for U in sorted({_pow2_bucket(u, self.pages_per_seq)
+                                 for u in range(1, self.pages_per_seq + 1)}):
+                    payloads = [
+                        {k: jnp.zeros((seg[k].shape[0], U)
+                                      + seg[k].shape[2:], seg[k].dtype)
+                         for k in seg}
+                        for seg in self.cache["segments"]
+                        if "k_pages" in seg]
+                    self.cache = self._promote(
+                        self.cache,
+                        jnp.full((U,), self.n_pages, jnp.int32), payloads,
+                        jnp.asarray(self.max_batch, jnp.int32),
+                        jnp.asarray(0, jnp.int32))
+                    count += 1
         else:
             _, _, _, self.cache = self._decode_run(
                 self.params, jnp.asarray(last), self.cache,
@@ -1101,6 +1289,14 @@ class InferenceEngine:
                                        jnp.zeros((1, S), jnp.int32), one,
                                        jnp.asarray([0], jnp.int32))
                 self.cache = self._insert(self.cache, one, 0)
+                count += 1
+        if prompt_lens:
+            # offline scoring shares the serving buckets; warm it alongside
+            # so a first score() call does not compile mid-window
+            for S in sorted({min(_bucket(n), self.max_len)
+                             for n in prompt_lens}):
+                self._score(self.params,
+                            jnp.full((S,), self.eos_id, jnp.int32))
                 count += 1
         return count
 
@@ -1170,6 +1366,18 @@ class InferenceEngine:
         while pending or any(s.active for s in self.slots):
             while pending and self.free_slots():
                 r = pending[0]
+                if r.swap is not None:
+                    # demoted request: promote its host-tier pages back and
+                    # re-enter decode directly (no prefill replay)
+                    if not self.can_admit_swap(r.req_id):
+                        if not any(s.active for s in self.slots):
+                            raise MemoryError(
+                                f"request {r.req_id} cannot fit in the "
+                                "page pool")
+                        break                    # wait for pages to free
+                    pending.pop(0)
+                    submitted[r.req_id] = self._admit_swapped(r)
+                    continue
                 if r.share_from >= 0 and not self.slots[r.share_from].parked:
                     r.share_from, r.suffix = -1, []   # prefix gone: monolithic
                 if r.share_from >= 0:

@@ -21,8 +21,14 @@ class NetworkModel:
         default_factory=lambda: random.Random(0))
 
     def delay_s(self, n_tokens: int) -> float:
-        bytes_ = n_tokens * self.bytes_per_token
-        base = self.rtt_s + bytes_ * 8 / (self.bandwidth_mbps * 1e6)
+        return self.transfer_s(n_tokens * self.bytes_per_token)
+
+    def transfer_s(self, n_bytes: float) -> float:
+        """Modeled one-way transfer time for a raw byte payload — the KV
+        swap path prices a demoted request's page bytes with this (the
+        swap-vs-replay crossover in docs/serving.md), the token path above
+        derives its bytes from a token count."""
+        base = self.rtt_s + n_bytes * 8 / (self.bandwidth_mbps * 1e6)
         if self.jitter_frac:
             base *= 1.0 + self._rng.uniform(-self.jitter_frac, self.jitter_frac)
             # jitter models queueing variance on top of physics: a draw with

@@ -14,7 +14,7 @@ def _jitted(cfg, kind):
 
 class Engine:
     def __init__(self, cfg):
-        self._decode = _jitted(cfg, "decode")
+        self._decode = _jitted(cfg, "decode")               # expect: RA205
 
     def step(self):
         toks, _ = self._decode(self.params, self.cache)     # expect: RA301

@@ -16,6 +16,11 @@ class Engine:
     def __init__(self, cfg):
         self._decode = _jitted(cfg, "decode")
 
+    def warmup(self):
+        # every registry entry point precompiles here (RA205)
+        toks, self.cache = self._decode(self.params, self.cache)
+        return toks
+
     def step(self):
         toks, self.cache = self._decode(self.params, self.cache)
         return toks

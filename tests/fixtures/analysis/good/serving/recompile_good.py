@@ -26,6 +26,15 @@ def _jitted(cfg, kind):
 class Engine:
     max_len = 256
 
+    def __init__(self, cfg):
+        self._decode = _jitted(cfg, "decode")
+        self._prefill = _jitted(cfg, "prefill")
+
+    def warmup(self):
+        # the precompile list covers every registry entry point (RA205)
+        self._decode(0)
+        self._prefill(0)
+
     def score(self, tokens):
         return min(_bucket(len(tokens)), self.max_len)
 

@@ -158,9 +158,9 @@ def test_attention_decode_paged_kernel_matches_oracle(live_pages):
     table = _chained_table(lens_np, page, P, start=1)
     lens = jnp.asarray(lens_np, jnp.int32)
 
-    out_ref, kr, vr = attn_lib.attention_decode_paged(
+    out_ref, kr, vr, _, _ = attn_lib.attention_decode_paged(
         cfg, params, x, kp, vp, table, lens, live_pages=live_pages)
-    out_pal, kk, vk = attn_lib.attention_decode_paged(
+    out_pal, kk, vk, _, _ = attn_lib.attention_decode_paged(
         cfg.with_(use_pallas=True), params, x, kp, vp, table, lens,
         live_pages=live_pages)
     np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_ref),
@@ -182,12 +182,12 @@ def test_attention_decode_paged_trim_bit_identical():
     lens_np = np.array([9, 21])
     table = _chained_table(lens_np, page, P)
     lens = jnp.asarray(lens_np, jnp.int32)
-    full, _, _ = attn_lib.attention_decode_paged(cfg, params, x, kp, vp,
-                                                 table, lens)
+    full, _, _, _, _ = attn_lib.attention_decode_paged(cfg, params, x, kp, vp,
+                                                       table, lens)
     live = -(-int(lens_np.max() + 1) // page)
-    trim, _, _ = attn_lib.attention_decode_paged(cfg, params, x, kp, vp,
-                                                 table, lens,
-                                                 live_pages=live)
+    trim, _, _, _, _ = attn_lib.attention_decode_paged(cfg, params, x, kp, vp,
+                                                       table, lens,
+                                                       live_pages=live)
     np.testing.assert_array_equal(np.asarray(full), np.asarray(trim))
 
 
