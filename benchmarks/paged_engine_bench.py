@@ -35,8 +35,17 @@ snapshotted bytes) vs evict-and-replay (recompute the prefill) — reporting
 the crossover length and the modeled edge-link transfer cost of the
 swapped bytes (`NetworkModel.transfer_s`).
 
+The chaos scenario drives the full progressive pipeline (cloud sketch ->
+edge ensemble -> select) through a seeded `FaultInjector`: a transfer-loss
+sweep exercises `transfer_with_retry`'s backoff, and a composite plan adds
+an edge-engine crash plus a straggler step. Per scenario it reports
+availability (every request must still get SOME answer — the degradation
+ladder's contract, asserted at 1.0 in CI), SLA attainment, goodput of
+in-deadline tokens, and the degraded-mode histogram.
+
   PYTHONPATH=src python -m benchmarks.paged_engine_bench [--smoke]
-      [--chunk-sweep] [--out BENCH_serving.json] [--timestamp ISO8601]
+      [--chunk-sweep] [--chaos] [--out BENCH_serving.json]
+      [--timestamp ISO8601]
 
 --smoke shrinks the workloads to a few requests/steps for CI (and leaves
 the sweep to the dedicated step); --chunk-sweep runs only the sweep and
@@ -420,6 +429,160 @@ def _run_swap_resume(cfg, params, smoke, results):
 
 
 # ---------------------------------------------------------------------------
+# Chaos: goodput + SLA attainment vs injected fault rate
+# ---------------------------------------------------------------------------
+
+# degraded-mode availability is the hard gate: EVERY request must get an
+# answer under EVERY fault scenario (the degradation ladder's whole point)
+REQUIRED_AVAILABILITY = 1.0
+
+
+def _build_chaos_pipeline(params_cache):
+    """A real-compute PICE pipeline cheap enough to rebuild per scenario:
+    untrained tiny models (the fault machinery doesn't care about text
+    quality) and synthetic latency models (cloud deliberately slow, edges
+    fast) so the scheduler always has a feasible progressive plan."""
+    from repro.configs.pice_cloud_edge import TINY_CLOUD, TINY_EDGE_B
+    from repro.core.profiler import LatencyModel
+    from repro.core.progressive import PICEConfig, PICEPipeline
+    from repro.core.scheduler import EdgeModelInfo
+    from repro.serving.network import NetworkModel
+
+    # max_len 512: the untrained sketch decodes to replacement glyphs that
+    # re-encode ~3x longer than trained text, and the expansion context is
+    # query + sketch + group — 256 would truncate the decode to one token
+    kw = dict(max_batch=MAX_BATCH, max_len=512, kv_backend="paged",
+              page_size=PAGE, eos_id=-1)
+    if "cloud" not in params_cache:
+        for key, c in (("cloud", TINY_CLOUD), ("edge-a", TINY_EDGE_A),
+                       ("edge-b", TINY_EDGE_B)):
+            c = c.with_(dtype="float32")
+            params_cache[key] = (c, transformer.init_params(
+                c, jax.random.PRNGKey(3)))
+    cfg_c, p_c = params_cache["cloud"]
+    cloud = InferenceEngine(cfg_c, p_c, name="chaos-cloud", **kw)
+    edges, infos = {}, []
+    for key, capability in (("edge-a", 0.7), ("edge-b", 0.55)):
+        cfg_e, p_e = params_cache[key]
+        edges[key] = InferenceEngine(cfg_e, p_e, name=key, **kw)
+        infos.append(EdgeModelInfo(
+            name=key, latency=LatencyModel(t0=0.05, rate=200.0, name=key),
+            capability=capability))
+    return PICEPipeline(cloud, edges, LatencyModel(t0=0.5, rate=20.0,
+                                                   name="chaos-cloud"),
+                        infos, network=NetworkModel(),
+                        cfg=PICEConfig(ensemble_size=2))
+
+
+def _chaos_requests(n):
+    from repro.serving.requests import Request, SLA
+
+    def mk(i, sla_s):
+        return Request(
+            query=f"explain in detail how the paging allocator layer "
+                  f"number {i} stores and evicts token pages",
+            category="generic", max_new_tokens=96,
+            sla=SLA(max_latency_s=sla_s) if sla_s else SLA())
+    return mk, n
+
+
+def _chaos_pass(pipe, mk, n, sla_s):
+    t0 = time.perf_counter()
+    resps = [pipe.handle(mk(i, sla_s)) for i in range(n)]
+    wall = time.perf_counter() - t0
+    answered = [r for r in resps if r.text.strip()]
+    in_sla = [r for r in answered
+              if sla_s == 0.0 or r.latency_s <= sla_s]
+    return {
+        "n": n,
+        "availability": len(answered) / n,
+        "sla_attainment": len(in_sla) / n,
+        "goodput_tok_s": sum(r.cloud_tokens + r.edge_tokens
+                             for r in in_sla) / wall,
+        "degraded": {m: sum(1 for r in resps if r.degraded == m)
+                     for m in set(r.degraded for r in resps) if m},
+        "retries": sum(r.retries for r in resps),
+        "hedges": sum(r.hedges for r in resps),
+        "wall_s": wall,
+    }
+
+
+def _run_chaos(smoke, results):
+    """Drive the full progressive pipeline through a seeded `FaultInjector`
+    at increasing transfer-loss rates plus one composite scenario (edge
+    crash + 5% loss + straggler). Publishes availability / SLA-attainment /
+    goodput curves; availability below REQUIRED_AVAILABILITY at ANY point
+    is a failure — degraded answers are fine, dropped requests are not."""
+    from repro.serving.faults import FaultInjector, FaultPlan
+
+    params_cache = {}
+    pipe = _build_chaos_pipeline(params_cache)
+    mk, n = _chaos_requests(3 if smoke else 8)
+    _chaos_pass(pipe, mk, n, sla_s=0.0)            # warm every compile path
+
+    pipe = _build_chaos_pipeline(params_cache)
+    calib = _chaos_pass(pipe, mk, n, sla_s=0.0)
+    sla_s = 3.0 * calib["wall_s"] / n              # generous per-request SLA
+    # smoke makes so few transfers that a 5% loss rate rarely fires at all;
+    # 0.25 reliably exercises the retry/backoff path in a 3-request pass
+    loss_rates = [0.0, 0.25] if smoke else [0.0, 0.05, 0.2]
+
+    curve = []
+    failures = []
+    for rate in loss_rates:
+        pipe = _build_chaos_pipeline(params_cache)
+        inj = FaultInjector(FaultPlan(seed=4, transfer_loss_p=rate))
+        inj.attach(network=pipe.network, engines=pipe.edges.values())
+        m = _chaos_pass(pipe, mk, n, sla_s)
+        inj.detach()
+        m.update(fault_rate=rate, scenario=f"loss_{rate}",
+                 injected=dict(inj.events))
+        curve.append(m)
+        emit(f"paged_engine/chaos_loss_{rate}", m["wall_s"] * 1e6,
+             f"availability={m['availability']:.2f}"
+             f";sla={m['sla_attainment']:.2f}"
+             f";goodput={m['goodput_tok_s']:.1f}")
+        print(f"# chaos loss={rate}: availability={m['availability']:.2f} "
+              f"sla={m['sla_attainment']:.2f} "
+              f"goodput={m['goodput_tok_s']:.1f} tok/s "
+              f"degraded={m['degraded']} injected={m['injected']}")
+
+    # composite scenario from the acceptance bar: one edge engine crashes,
+    # 5% transfer loss, one straggler step
+    pipe = _build_chaos_pipeline(params_cache)
+    inj = FaultInjector(FaultPlan(
+        seed=11, transfer_loss_p=0.05, engine_crash_steps=(4,),
+        straggler_steps=(9,), straggler_delay_s=0.02))
+    inj.attach(network=pipe.network, engines=pipe.edges.values())
+    comp = _chaos_pass(pipe, mk, n, sla_s)
+    inj.detach()
+    comp.update(fault_rate=0.05, scenario="composite",
+                injected=dict(inj.events))
+    curve.append(comp)
+    emit("paged_engine/chaos_composite", comp["wall_s"] * 1e6,
+         f"availability={comp['availability']:.2f}"
+         f";sla={comp['sla_attainment']:.2f}"
+         f";goodput={comp['goodput_tok_s']:.1f}")
+    print(f"# chaos composite: availability={comp['availability']:.2f} "
+          f"sla={comp['sla_attainment']:.2f} degraded={comp['degraded']} "
+          f"injected={comp['injected']}")
+
+    results["chaos"] = {
+        "sla_s": sla_s,
+        "calibration_goodput_tok_s": calib["goodput_tok_s"],
+        "scenarios": curve,
+    }
+    for m in curve:
+        if m["availability"] < REQUIRED_AVAILABILITY:
+            failures.append(
+                f"chaos {m['scenario']}: availability "
+                f"{m['availability']:.2f} below {REQUIRED_AVAILABILITY} — "
+                f"{int((1 - m['availability']) * m['n'])} request(s) got no "
+                f"answer")
+    return failures
+
+
+# ---------------------------------------------------------------------------
 # Chunked-prefill head-of-line sweep
 # ---------------------------------------------------------------------------
 
@@ -547,7 +710,8 @@ def _run_chunk_sweep(cfg, params, smoke, results):
 
 
 def run(smoke: bool = False, chunk_sweep_only: bool = False,
-        out: str = "BENCH_serving.json", timestamp: str = ""):
+        chaos_only: bool = False, out: str = "BENCH_serving.json",
+        timestamp: str = ""):
     cfg = TINY_EDGE_A.with_(dtype="float32")
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
     kv_bytes_per_tok = (2 * cfg.n_layers * cfg.n_kv_heads
@@ -557,8 +721,9 @@ def run(smoke: bool = False, chunk_sweep_only: bool = False,
                         "page_size": PAGE, **_stamp(timestamp)},
                "workloads": {}}
 
+    merge_only = chunk_sweep_only or chaos_only
     failures = []
-    if not chunk_sweep_only:
+    if not merge_only:
         n_req, max_new = (6, 8) if smoke else (N_REQ, MAX_NEW)
         failures += _run_workloads(cfg, params, kv_bytes_per_tok, n_req,
                                    max_new, results)
@@ -569,20 +734,24 @@ def run(smoke: bool = False, chunk_sweep_only: bool = False,
                     fan_new, results)
         failures += _run_kv_dtype(cfg, params, smoke, results)
         failures += _run_swap_resume(cfg, params, smoke, results)
-    if chunk_sweep_only or not smoke:
+    if chunk_sweep_only or (not smoke and not merge_only):
         # smoke CI splits the sweep into its own step (--chunk-sweep after
         # the fan-out smoke) so the stall measurement is not paid twice
         failures += _run_chunk_sweep(cfg, params, smoke, results)
+    if chaos_only or (not smoke and not merge_only):
+        failures += _run_chaos(smoke, results)
 
-    if chunk_sweep_only:
+    if merge_only:
         # enrich an existing trajectory instead of clobbering its
-        # workloads/fanout sections (CI writes both from separate steps);
-        # the provenance stamp is refreshed — it must describe the LAST
-        # writer of the artifact
+        # workloads/fanout sections (CI writes the sections from separate
+        # steps); the provenance stamp is refreshed — it must describe the
+        # LAST writer of the artifact
         try:
             with open(out) as f:
                 prev = json.load(f)
-            prev["chunk_sweep"] = results["chunk_sweep"]
+            for key in ("chunk_sweep", "chaos"):
+                if key in results:
+                    prev[key] = results[key]
             prev.setdefault("meta", {}).update(_stamp(timestamp))
             results = prev
         except (OSError, ValueError, KeyError):
@@ -599,11 +768,13 @@ if __name__ == "__main__":
                     help="tiny config / few steps (CI)")
     ap.add_argument("--chunk-sweep", action="store_true",
                     help="run only the chunked-prefill stall sweep")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the fault-injection chaos scenario")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="machine-readable trajectory output path")
     ap.add_argument("--timestamp", default="",
                     help="inject a fixed ISO-8601 timestamp into meta "
                          "(default: current UTC time)")
     args = ap.parse_args()
-    run(smoke=args.smoke, chunk_sweep_only=args.chunk_sweep, out=args.out,
-        timestamp=args.timestamp)
+    run(smoke=args.smoke, chunk_sweep_only=args.chunk_sweep,
+        chaos_only=args.chaos, out=args.out, timestamp=args.timestamp)

@@ -6,6 +6,7 @@ Four passes (see docs/static-analysis.md for the rule catalogue):
   recompile    RA2xx  bounded jit shape variants + shared registry
   donation     RA3xx  donated buffers never read after dispatch
   pallas_spec  RA4xx  BlockSpec arity/alignment/VMEM contracts
+  exceptions   RA5xx  caught faults must be re-raised or recorded
 
 Run `python -m repro.analysis --strict` locally or in CI. Everything in this
 package is stdlib-only: the passes parse source and never import the modules
@@ -16,7 +17,8 @@ from __future__ import annotations
 from pathlib import Path
 from typing import List
 
-from repro.analysis import donation, host_sync, pallas_spec, recompile, rules
+from repro.analysis import (donation, exceptions, host_sync, pallas_spec,
+                            recompile, rules)
 from repro.analysis.common import SourceFile, Violation
 
 PASSES = {
@@ -24,6 +26,7 @@ PASSES = {
     "recompile": recompile.run,
     "donation": donation.run,
     "pallas-spec": pallas_spec.run,
+    "exceptions": exceptions.run,
 }
 
 

@@ -74,6 +74,9 @@ RULES = {
     "RA403": "literal BlockSpec/scratch dim in the last two positions is "
              "not sublane-aligned (multiple of 8)",
     "RA404": "estimated VMEM footprint (blocks + scratch) exceeds the cap",
+    # fault observability
+    "RA501": "except clause swallows the exception without re-raising or "
+             "recording it to a monitor/telemetry counter",
 }
 
 # ---------------------------------------------------------------------------
@@ -91,6 +94,8 @@ RECOMPILE_SCOPE = ("serving/", "finetune/", "training/")
 DONATION_SCOPE = ("serving/engine.py", "training/train_loop.py")
 # pallas-spec: every kernel module.
 PALLAS_SCOPE_GLOB = "kernels/*/kernel.py"
+# fault observability: the trees the degradation ladder runs through.
+EXCEPTIONS_SCOPE = ("serving/", "core/")
 
 # The ONLY function allowed to call jax.device_get without a pragma: the
 # engine's deferred-harvest readback (one device_get per step, the plan/run

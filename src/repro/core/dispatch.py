@@ -8,20 +8,28 @@ quadratic-cost padding waste the paper calls out).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 from repro.serving.requests import SketchTask
 
 
 @dataclasses.dataclass
 class MultiListQueue:
-    """Lists q_1..q_n bucketed by expected length."""
+    """Lists q_1..q_n bucketed by expected length.
+
+    `max_size` is enforced at push: a full queue sheds its least latency-
+    critical work (the longest queued expected length) to admit a shorter
+    incoming task, or rejects the incoming task outright when it is itself
+    the longest. Shed/reject counts land in `shed_count` and, when a
+    `monitor` (RuntimeMonitor) is attached, in `monitor.queue_shed`."""
     boundaries: Sequence[int] = (64, 128, 256, 512, 1024)
     max_size: int = 64
+    monitor: Optional[object] = None
 
     def __post_init__(self):
         self.lists: List[List[SketchTask]] = [[] for _ in
                                               range(len(self.boundaries) + 1)]
+        self.shed_count = 0
 
     def _index(self, l: int) -> int:
         for j, b in enumerate(self.boundaries):
@@ -36,9 +44,38 @@ class MultiListQueue:
     def full(self) -> bool:
         return len(self) >= self.max_size
 
-    def push(self, task: SketchTask) -> None:
-        # Lines 3-6: determine list index by l_i, append
+    def push(self, task: SketchTask) -> bool:
+        """Enqueue `task`; returns False when it was refused (queue full and
+        the task is the least-critical candidate). Lines 3-6 of Algorithm 1
+        (bucket by l_i) are unchanged when the queue has room."""
+        if len(self) >= self.max_size:
+            victim = self._shed_candidate()
+            if victim is None or victim.expected_length <= \
+                    task.expected_length:
+                # incoming task is itself the longest: refuse it
+                self._record_shed(task)
+                return False
+            self.lists[self._index(victim.expected_length)].remove(victim)
+            self._record_shed(victim)
         self.lists[self._index(task.expected_length)].append(task)
+        return True
+
+    def _shed_candidate(self) -> Optional[SketchTask]:
+        """The queued task shedding frees the most time for: the largest
+        expected length (the least latency-critical by the multi-list
+        ordering), youngest within a list so older work keeps its place."""
+        longest = None
+        for q in self.lists:
+            for t in q:
+                if longest is None or t.expected_length >= \
+                        longest.expected_length:
+                    longest = t
+        return longest
+
+    def _record_shed(self, task: SketchTask) -> None:
+        self.shed_count += 1
+        if self.monitor is not None:
+            self.monitor.on_shed(task.expected_length)
 
     def pull_batch(self, batch_size: int) -> List[SketchTask]:
         """Lines 7-11: pull a batch from the longest list (FIFO within it)."""

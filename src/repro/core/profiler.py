@@ -114,6 +114,16 @@ class RuntimeMonitor:
     # the length predictor's queued_expected_tokens into a page-count
     # forecast for `kv_predicted_utilization`
     kv_page_tokens: int = 0
+    # fault/degradation telemetry (PICE fault model): edge member attempts
+    # and failures feed `edge_failure_rate`, which inflates the scheduler's
+    # Eq.(2) edge term so repeated faults steer admission back toward cloud
+    edge_attempts: int = 0
+    edge_failures: int = 0
+    net_retries: int = 0
+    net_failures: int = 0
+    queue_shed: int = 0
+    fallback_primaries: int = 0     # unknown-model guard hits (progressive)
+    degraded: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def on_enqueue(self, expected_tokens: float):
         self.queue_depth += 1
@@ -123,6 +133,39 @@ class RuntimeMonitor:
         self.queue_depth = max(0, self.queue_depth - 1)
         self.queued_expected_tokens = max(
             0.0, self.queued_expected_tokens - expected_tokens)
+
+    def on_shed(self, expected_tokens: float):
+        """A queue admission was refused (or a queued task dropped) because
+        the dispatch queue hit max_size. Counts only — depth bookkeeping
+        stays with on_enqueue/on_dequeue, which shed tasks never reached."""
+        del expected_tokens
+        self.queue_shed += 1
+
+    def record_edge_result(self, ok: bool):
+        """One ensemble-member expansion attempt finished (ok) or faulted/
+        timed out (not ok)."""
+        self.edge_attempts += 1
+        if not ok:
+            self.edge_failures += 1
+
+    def record_transfer(self, ok: bool, attempts: int):
+        """Account a `transfer_with_retry` outcome."""
+        self.net_retries += max(attempts - 1, 0)
+        if not ok:
+            self.net_failures += 1
+
+    def record_degraded(self, mode: str):
+        """A request landed on a degradation rung (see Response.degraded)."""
+        self.degraded[mode] = self.degraded.get(mode, 0) + 1
+
+    @property
+    def edge_failure_rate(self) -> float:
+        """Observed fraction of edge expansion attempts that faulted; 0.0
+        until any attempt is recorded, so a fault-free fleet reproduces the
+        seed scheduler behavior exactly."""
+        if self.edge_attempts <= 0:
+            return 0.0
+        return self.edge_failures / self.edge_attempts
 
     def update_memory(self, pages_used: int, pages_total: int,
                       evictions: int = 0, pages_shared: int = 0,

@@ -25,6 +25,7 @@ from repro.core.scheduler import DynamicScheduler, EdgeModelInfo, ScheduleDecisi
 from repro.core.selection import select_model
 from repro.data import tokenizer as tok
 from repro.serving.engine import InferenceEngine
+from repro.serving.faults import EngineCrash
 from repro.serving.network import NetworkModel
 from repro.serving.requests import Request, Response, SketchTask
 
@@ -38,6 +39,9 @@ class PICEConfig:
     queue_max: int = 8
     max_parallelism: int = 8
     ensemble_size: int = 2         # how many edge models expand each group
+    # sketch-transfer retry policy (NetworkModel.transfer_with_retry)
+    transfer_max_attempts: int = 4
+    transfer_backoff_s: float = 0.05
 
 
 class PICEPipeline:
@@ -46,14 +50,18 @@ class PICEPipeline:
                  cloud_latency: LatencyModel,
                  edge_infos: List[EdgeModelInfo],
                  network: Optional[NetworkModel] = None,
-                 cfg: PICEConfig = PICEConfig(),
+                 cfg: Optional[PICEConfig] = None,
                  n_edge_devices: Optional[int] = None):
         self.cloud = cloud_engine
         self.edges = edge_engines
-        self.cfg = cfg
+        # default-construct per pipeline: a dataclass default instance in
+        # the signature was SHARED across every pipeline, so one caller
+        # mutating cfg.ensemble_size reconfigured all of them
+        self.cfg = cfg = cfg or PICEConfig()
         self.network = network or NetworkModel()
         self.monitor = RuntimeMonitor()
-        self.queue = MultiListQueue(max_size=cfg.queue_max)
+        self.queue = MultiListQueue(max_size=cfg.queue_max,
+                                    monitor=self.monitor)
         self.edge_infos = sorted(edge_infos, key=lambda e: e.capability)
         self.scheduler = DynamicScheduler(
             cloud_latency, self.edge_infos, self.network,
@@ -65,14 +73,68 @@ class PICEPipeline:
     def predict_length(self, req: Request) -> int:
         return sketch_lib.heuristic_expected_length(req.query, req.category)
 
-    def _cloud_generate(self, prompt: str, max_new: int):
+    def _cloud_generate(self, prompt: str, max_new: int,
+                        deadline_s: Optional[float] = None):
         toks = tok.encode(prompt)
-        (out, lps), = self.cloud.generate([toks], max_new=max_new)
+        (out, lps), = self.cloud.generate([toks], max_new=max_new,
+                                          deadline_s=deadline_s)
         return tok.decode(out), out, lps
 
+    def _edge_info_for(self, primary: str) -> EdgeModelInfo:
+        """The EdgeModelInfo for `primary`, guarding against a model name
+        the selector produced that no longer has a profile (a bare
+        StopIteration otherwise): fall back to the most capable edge info
+        and record the mismatch."""
+        info = next((e for e in self.edge_infos if e.name == primary), None)
+        if info is None:
+            info = self.edge_infos[-1]      # sorted ascending by capability
+            self.monitor.fallback_primaries += 1
+        return info
+
+    def _finish(self, resp: Response) -> Response:
+        self.stats[resp.mode] = self.stats.get(resp.mode, 0) + 1
+        if resp.degraded:
+            self.monitor.record_degraded(resp.degraded)
+        return resp
+
     # ------------------------------------------------------------------
+    def _degrade_cloud(self, req: Request, l_i: int, t_start: float,
+                       budget_s: float, deadline: Optional[float],
+                       sketch_text: str, n_sketch_toks: int,
+                       faults: Dict[str, int], retries: int,
+                       net_delay: float = 0.0) -> Response:
+        """Degradation rungs when the edge path is unavailable (all members
+        faulted, the sketch transfer was lost, or the dispatch queue shed
+        the task): re-answer from the cloud while budget remains, else hand
+        back the sketch itself — every request gets SOME answer."""
+        now = time.perf_counter()
+        if deadline is None or now < deadline:
+            text, out, _ = self._cloud_generate(
+                sketch_lib.cloud_full_prompt(req.query), max_new=l_i,
+                deadline_s=deadline)
+            return self._finish(Response(
+                req_id=req.req_id, text=text.strip(), mode="cloud_full",
+                cloud_tokens=n_sketch_toks + len(out),
+                latency_s=time.perf_counter() - t_start + net_delay,
+                network_s=net_delay, model_used=self.cloud.name,
+                degraded="cloud_full_fallback", retries=retries,
+                deadline_s=budget_s, faults=faults))
+        return self._finish(Response(
+            req_id=req.req_id, text=(sketch_text or req.query).strip(),
+            mode="progressive", cloud_tokens=n_sketch_toks,
+            latency_s=now - t_start + net_delay, network_s=net_delay,
+            model_used=self.cloud.name, degraded="sketch_passthrough",
+            retries=retries, deadline_s=budget_s, faults=faults))
+
     def handle(self, req: Request) -> Response:
         t_start = time.perf_counter()
+        budget_s = req.sla.max_latency_s or 0.0
+        deadline = (t_start + budget_s) if budget_s else None
+        faults: Dict[str, int] = {}
+
+        def fault(kind: str) -> None:
+            faults[kind] = faults.get(kind, 0) + 1
+
         # refresh KV-memory telemetry so Eq.(2) sees real page-pool pressure
         self.monitor.observe_engines(self.edges.values())
         l_i = min(self.predict_length(req), req.max_new_tokens)
@@ -84,19 +146,22 @@ class PICEPipeline:
             decision = self.scheduler.schedule(l_i, sla=req.sla)
 
         if decision.mode == "cloud_full":
-            self.stats["cloud_full"] += 1
             text, out, _ = self._cloud_generate(
-                sketch_lib.cloud_full_prompt(req.query), max_new=l_i)
-            return Response(req_id=req.req_id, text=text.strip(),
-                            mode="cloud_full", cloud_tokens=len(out),
-                            latency_s=time.perf_counter() - t_start,
-                            model_used=self.cloud.name)
+                sketch_lib.cloud_full_prompt(req.query), max_new=l_i,
+                deadline_s=deadline)
+            return self._finish(Response(
+                req_id=req.req_id, text=text.strip(),
+                mode="cloud_full", cloud_tokens=len(out),
+                latency_s=time.perf_counter() - t_start,
+                model_used=self.cloud.name, deadline_s=budget_s,
+                faults=faults))
 
         # ---- progressive path (2b..5) -----------------------------------
-        self.stats["progressive"] += 1
         sketch_text, sk_toks, _ = self._cloud_generate(
             sketch_lib.cloud_sketch_prompt(req.query, decision.sketch_tokens),
-            max_new=min(decision.sketch_tokens + 10, self.cfg.max_sketch_tokens))
+            max_new=min(decision.sketch_tokens + 10,
+                        self.cfg.max_sketch_tokens),
+            deadline_s=deadline)
         sketch_text = sketch_text.strip()
         sentences = sketch_lib.segment_sketch(sketch_text)
         if not sentences:
@@ -105,19 +170,43 @@ class PICEPipeline:
         task = SketchTask(req_id=req.req_id, query=req.query,
                           sketch=sketch_text, sentences=sentences,
                           expected_length=l_i, sketch_tokens=len(sk_toks))
-        self.queue.push(task)
+        if not self.queue.push(task):
+            # the dispatch queue is full and this task is the least critical
+            # of the lot: shed it from the edge path, not from service
+            fault("queue_shed")
+            return self._degrade_cloud(req, l_i, t_start, budget_s, deadline,
+                                       sketch_text, len(sk_toks), faults,
+                                       retries=0)
         self.monitor.on_enqueue(l_i)
-        net_delay = self.network.delay_s(task.sketch_tokens)
+
+        # ship the sketch to the edge over the faultable link (retry with
+        # capped jittered exponential backoff; latency is modeled)
+        xfer = self.network.transfer_with_retry(
+            task.sketch_tokens * self.network.bytes_per_token,
+            max_attempts=self.cfg.transfer_max_attempts,
+            base_backoff_s=self.cfg.transfer_backoff_s)
+        self.monitor.record_transfer(xfer.ok, xfer.attempts)
+        retries = xfer.attempts - 1
+        net_delay = xfer.latency_s
+        if xfer.failure:
+            fault("transfer_" + xfer.failure)
+        if not xfer.ok:
+            # the sketch never reached the edge fleet: unqueue and degrade
+            self.queue.pull_batch(1)
+            self.monitor.on_dequeue(l_i)
+            return self._degrade_cloud(req, l_i, t_start, budget_s, deadline,
+                                       sketch_text, len(sk_toks), faults,
+                                       retries, net_delay)
 
         # Algorithm 2: (re)select the SLM against the remaining budget
         sel = select_model(decision.edge_model, self.edge_infos, l_i,
                            task.sketch_tokens, self.scheduler.cloud,
                            queue_len=len(self.queue),
                            queue_max=self.cfg.queue_max)
-        primary = sel.model
+        einfo = self._edge_info_for(sel.model)
+        primary = einfo.name
 
         # execution optimizer: binary-tree merge plan
-        einfo = next(e for e in self.edge_infos if e.name == primary)
         budget = self.scheduler.cloud.f(l_i) - self.scheduler.cloud.f(
             task.sketch_tokens)
 
@@ -154,8 +243,15 @@ class PICEPipeline:
         chosen: List[str] = []
         total_conf, edge_tokens = 0.0, 0
         group_results = {}
+        hedges = 0
         for name in names:
+            if deadline is not None and time.perf_counter() >= deadline:
+                # budget exhausted: don't launch further members — ensemble
+                # selects from whatever already returned (quorum 1)
+                break
             eng = self.edges[name]
+            if name != primary:
+                hedges += 1
             # SLA intent rides with the work: the primary member's
             # expansion is latency-critical (priority 1), extra ensemble
             # members opportunistic (0). In this synchronous single-tenant
@@ -164,34 +260,65 @@ class PICEPipeline:
             # requests — eviction and chunk-ingest bandwidth then favor
             # the critical work (see engine._evict_victim)
             prio = 1 if name == primary else 0
-            if hasattr(eng, "generate_fanout"):
-                outs = eng.generate_fanout(prefix_toks, suffix_toks,
-                                           max_new=max_new, priority=prio)
-            else:
-                outs = eng.generate([prefix_toks + sfx for sfx in suffix_toks],
-                                    max_new=max_new,
-                                    priorities=[prio] * len(suffix_toks))
+            try:
+                if hasattr(eng, "generate_fanout"):
+                    outs = eng.generate_fanout(prefix_toks, suffix_toks,
+                                               max_new=max_new, priority=prio,
+                                               deadline_s=deadline)
+                else:
+                    outs = eng.generate(
+                        [prefix_toks + sfx for sfx in suffix_toks],
+                        max_new=max_new,
+                        priorities=[prio] * len(suffix_toks),
+                        deadline_s=deadline)
+            except (EngineCrash, MemoryError) as exc:
+                # injected crash / pool exhaustion: drop this member, scrub
+                # its engine state, and let quorum-1 pick from the rest
+                if hasattr(eng, "abort_all"):
+                    eng.abort_all()
+                self.monitor.record_edge_result(False)
+                fault("edge_" + type(exc).__name__)
+                continue
+            self.monitor.record_edge_result(True)
             group_results[name] = outs
+        if not group_results:
+            # every member faulted or the deadline arrived before any could
+            # launch: the edge path produced nothing
+            return self._degrade_cloud(req, l_i, t_start, budget_s, deadline,
+                                       sketch_text, len(sk_toks), faults,
+                                       retries, net_delay)
+        degraded = "ensemble_partial" if len(group_results) < len(names) \
+            else ""
         for gi in range(len(plan.groups)):
             cands = []
-            for name in names:
-                out, lps = group_results[name][gi]
+            for name, outs in group_results.items():
+                out, lps = outs[gi]
+                if not out:
+                    continue      # deadline-cancelled before its first token
                 cands.append(ens.Candidate(
                     text=tok.decode(out).strip(),
                     mean_log2_prob=ens.mean_log2_from_nats(lps),
                     n_tokens=len(out), model=name))
+            if not cands:
+                # no member produced this group: the sketch sentences
+                # themselves are the (terse but correct-topic) fallback
+                chosen.append(" ".join(plan.groups[gi]))
+                degraded = "sketch_groups"
+                continue
             best, scores = ens.select_best(cands, sketch_text,
                                            self.cfg.alpha1, self.cfg.alpha2)
             chosen.append(best.text)
             total_conf += max(scores)
             edge_tokens += best.n_tokens
         text = " ".join(chosen).strip()
-        return Response(req_id=req.req_id, text=text, mode="progressive",
-                        cloud_tokens=len(sk_toks), edge_tokens=edge_tokens,
-                        latency_s=time.perf_counter() - t_start + net_delay,
-                        network_s=net_delay,
-                        confidence=total_conf / max(len(plan.groups), 1),
-                        model_used=primary)
+        return self._finish(Response(
+            req_id=req.req_id, text=text, mode="progressive",
+            cloud_tokens=len(sk_toks), edge_tokens=edge_tokens,
+            latency_s=time.perf_counter() - t_start + net_delay,
+            network_s=net_delay,
+            confidence=total_conf / max(len(plan.groups), 1),
+            model_used=primary, degraded=degraded, retries=retries,
+            hedges=hedges, deadline_s=budget_s, faults=faults))
 
     def _ensemble_names(self, primary: str) -> List[str]:
         names = [primary]

@@ -99,9 +99,15 @@ class DynamicScheduler:
         wait = (self.monitor.queued_expected_tokens / edge.latency.rate
                 ) / (max(parallelism, 1) * self.n_edge)
         wait *= self.memory_pressure_factor()
+        # observed edge failure rate inflates the edge-side term: a member
+        # that fails with probability q is expected to cost 1/(1-q) runs
+        # (retry/hedge), so repeated faults push Eq.(2) past the budget and
+        # admission steers back toward cloud_full. At rate 0 (fault-free or
+        # no telemetry yet) this is exactly the seed expression.
+        fail = min(self.monitor.edge_failure_rate, 0.9)
         return (self.cloud.f(sketch_tokens)
                 + self.network.delay_s(sketch_tokens)
-                + c_f_l + wait)
+                + (c_f_l + wait) / (1.0 - fail))
 
     def feasible(self, sketch_tokens: int, expected_len: int,
                  edge: EdgeModelInfo, parallelism: int,

@@ -340,6 +340,16 @@ class InferenceEngine:
         self.kv_bytes_read = 0
         self._page_kv_bytes = 0
         self.host_swap = False
+        # fault-injection surfaces (serving/faults.py): step_hook(engine) is
+        # called at the top of every step() and may cancel slots, stall, or
+        # raise EngineCrash; swap_fault_hook(req_id) -> True marks a swap
+        # promote's upload as lost, degrading that resume to evict-and-replay
+        self.step_hook = None
+        self.swap_fault_hook = None
+        # cancellation / degradation telemetry
+        self.cancels = 0
+        self.deadline_cancels = 0
+        self.swap_losses = 0
 
         if kv_backend == "paged":
             cfg.validate_paged(page_size, max_len)
@@ -523,6 +533,72 @@ class InferenceEngine:
         s.prefill_toks = []     # a mid-prefill victim restarts its chunks
         self.evictions += 1
         return True
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a mid-flight request: ingesting, decoding, evicted-and-
+        queued, or demoted to the host tier. Frees its pages (COW refcounts
+        protect shared prefix pages), drops any host-tier snapshot, and
+        prunes its slot from the deferred-harvest commit list so a slot
+        reused by a later admission can never receive the cancelled
+        request's in-flight token. Surviving requests are untouched:
+        per-row attention reads only the survivor's own block-table row,
+        decode writes are active-masked, and the engine PRNG key advances
+        per step regardless of which rows are active — so survivors'
+        outputs are bit-identical to a run without the cancellation.
+
+        Returns True if the request was found in any live state. The slot
+        keeps its partial tokens so a driving `_run` loop collects them as
+        the (truncated) result."""
+        hit = False
+        for i, s in enumerate(self.slots):
+            if s.active and s.req_id == req_id:
+                s.active = False
+                s.evicted = False
+                s.pending, s.prefill_toks = [], []
+                s.fork_src, s.suffix = -1, []
+                if self.kv_backend == "paged":
+                    self._release_slot_pages(i)
+                if self._pending_decode is not None:
+                    commits, toks, lps = self._pending_decode
+                    if i in commits:
+                        # the harvest guard alone is not enough: a request
+                        # admitted into this slot before the next harvest
+                        # would satisfy `slots[i].active` and absorb the
+                        # cancelled request's token
+                        self._pending_decode = (
+                            [c for c in commits if c != i], toks, lps)
+                hit = True
+        kept = []
+        for r in self._resume_queue:
+            if r.req_id != req_id:
+                kept.append(r)
+                continue
+            if r.swap is not None:
+                self.alloc.drop_hosted(r.req_id)
+            hit = True
+        self._resume_queue = kept
+        if hit:
+            self.cancels += 1
+            self._t_admit.pop(req_id, None)
+        return hit
+
+    def abort_all(self) -> int:
+        """Cancel every live request — the recovery path after an injected
+        (or real) engine crash mid-`_run`: pages return to the pool, host-
+        tier snapshots are dropped, and the in-flight decode's commits are
+        discarded. Parked prefix slots are left alone (their owner's
+        `generate_fanout` finally-block releases them). Returns the number
+        of requests aborted."""
+        n = 0
+        for s in list(self.slots):
+            if s.active:
+                self.cancel(s.req_id)
+                n += 1
+        for r in list(self._resume_queue):
+            self.cancel(r.req_id)
+            n += 1
+        self._pending_decode = None
+        return n
 
     def memory_stats(self) -> Dict[str, float]:
         """Engine-level KV memory telemetry (for RuntimeMonitor).
@@ -1146,6 +1222,11 @@ class InferenceEngine:
         sampled token and the sampled output is discarded until the suffix
         is exhausted — the logits after the final suffix token seed the
         first real sample."""
+        if self.step_hook is not None:
+            # fault injection point: may stall (straggler), cancel a slot
+            # (mid-decode crash), squeeze the page pool, or raise
+            # EngineCrash — all before this step's harvest/plan/dispatch
+            self.step_hook(self)
         worked = self._harvest()
         if not any(s.active for s in self.slots):
             return worked
@@ -1302,22 +1383,26 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------
     def generate(self, prompts: List[List[int]], max_new: int = 128,
-                 priorities: Optional[List[int]] = None
+                 priorities: Optional[List[int]] = None,
+                 deadline_s: Optional[float] = None
                  ) -> List[Tuple[List[int], List[float]]]:
         """Batch-generate; returns (tokens, logprobs) per prompt.
         `priorities` (optional, per prompt) orders preemption under memory
-        pressure — higher survives longer."""
+        pressure — higher survives longer. `deadline_s` (perf_counter
+        timestamp) caps the run: once passed, every in-flight request is
+        cancelled and returns whatever it generated so far."""
         priorities = priorities or [0] * len(prompts)
         assert len(priorities) == len(prompts), \
             "priorities must match prompts one-to-one"
         pending = [_Resume(req_id=i, prompt=p, max_new=max_new,
                            carry_tokens=[], carry_lps=[], priority=pr)
                    for i, (p, pr) in enumerate(zip(prompts, priorities))]
-        return self._run(pending)
+        return self._run(pending, deadline_s=deadline_s)
 
     def generate_fanout(self, prefix: List[int],
                         suffixes: List[List[int]], max_new: int = 128,
-                        priority: int = 0
+                        priority: int = 0,
+                        deadline_s: Optional[float] = None
                         ) -> List[Tuple[List[int], List[float]]]:
         """Expand one shared prefix N ways (the PICE sketch fan-out: every
         ensemble member / parallel expansion segment repeats the same
@@ -1330,7 +1415,8 @@ class InferenceEngine:
                 or not self.prefix_sharing):
             return self.generate([list(prefix) + list(s) for s in suffixes],
                                  max_new=max_new,
-                                 priorities=[priority] * len(suffixes))
+                                 priorities=[priority] * len(suffixes),
+                                 deadline_s=deadline_s)
         p_slot = self.prefill_prefix(prefix)
         pending = [_Resume(req_id=i, prompt=list(prefix) + list(sfx),
                            max_new=max_new, carry_tokens=[], carry_lps=[],
@@ -1338,11 +1424,12 @@ class InferenceEngine:
                            priority=priority)
                    for i, sfx in enumerate(suffixes)]
         try:
-            return self._run(pending)
+            return self._run(pending, deadline_s=deadline_s)
         finally:
             self.release_prefix(p_slot)
 
-    def _run(self, pending: List[_Resume]
+    def _run(self, pending: List[_Resume],
+             deadline_s: Optional[float] = None
              ) -> List[Tuple[List[int], List[float]]]:
         n = len(pending)
         for r in pending:
@@ -1355,17 +1442,28 @@ class InferenceEngine:
         mine = {r.req_id for r in pending}
         self._inflight |= mine
         try:
-            return self._run_inner(pending, n)
+            return self._run_inner(pending, n, deadline_s)
         finally:
             self._inflight -= mine
 
-    def _run_inner(self, pending: List[_Resume], n: int
+    def _run_inner(self, pending: List[_Resume], n: int,
+                   deadline_s: Optional[float] = None
                    ) -> List[Tuple[List[int], List[float]]]:
         results: Dict[int, Tuple[List[int], List[float]]] = {}
         submitted: Dict[int, int] = {}          # req_id -> slot
         while pending or any(s.active for s in self.slots):
             while pending and self.free_slots():
                 r = pending[0]
+                if r.swap is not None and self.swap_fault_hook is not None \
+                        and self.swap_fault_hook(r.req_id):
+                    # injected swap-upload loss: drop the host snapshot and
+                    # degrade to the evict-and-replay resume — r.prompt and
+                    # the carried tokens are exactly what a non-swap
+                    # eviction queued, so the replay is the same
+                    # bit-identical path (composition, not a new mechanism)
+                    self.alloc.drop_hosted(r.req_id)
+                    r.swap = None
+                    self.swap_losses += 1
                 if r.swap is not None:
                     # demoted request: promote its host-tier pages back and
                     # re-enter decode directly (no prefill replay)
@@ -1398,6 +1496,25 @@ class InferenceEngine:
                     suffix=r.suffix, priority=r.priority)
                 submitted[r.req_id] = slot
             self.step()
+            if deadline_s is not None and time.perf_counter() > deadline_s \
+                    and (pending or any(s.active for s in self.slots)):
+                # deadline blown: cancel every in-flight request (partial
+                # tokens are collected below) and settle never-admitted /
+                # evicted work with whatever it carried
+                for rid, sl in list(submitted.items()):
+                    if self.slots[sl].active:
+                        self.cancel(rid)
+                        self.deadline_cancels += 1
+                if self._resume_queue:
+                    pending[:0] = reversed(self._resume_queue)
+                    self._resume_queue.clear()
+                for r in pending:
+                    if r.swap is not None:
+                        self.alloc.drop_hosted(r.req_id)
+                    results[r.req_id] = (list(r.carry_tokens),
+                                         list(r.carry_lps))
+                    self.deadline_cancels += 1
+                pending.clear()
             done = [rid for rid, sl in submitted.items()
                     if not self.slots[sl].active]
             for rid in done:

@@ -9,6 +9,17 @@ from __future__ import annotations
 
 import dataclasses
 import random
+from typing import Callable, Optional, Tuple
+
+
+@dataclasses.dataclass
+class TransferResult:
+    """Outcome of `transfer_with_retry`: modeled latency includes every
+    failed attempt's cost plus the backoff waits between attempts."""
+    ok: bool
+    attempts: int
+    latency_s: float
+    failure: str = ""              # last fault kind when not ok / degraded
 
 
 @dataclasses.dataclass
@@ -17,6 +28,15 @@ class NetworkModel:
     rtt_s: float = 0.02
     jitter_frac: float = 0.0
     bytes_per_token: float = 4.0
+    # fault injection point (serving/faults.py): called once per transfer
+    # attempt with the payload size, returns None (clean) or a
+    # ("loss"|"timeout"|"collapse", param) verdict
+    fault_hook: Optional[Callable[[float], Optional[Tuple[str, float]]]] = None
+    # cumulative accounting across transfer_with_retry calls
+    transfers: int = 0
+    retries: int = 0
+    transfer_failures: int = 0
+    retry_latency_s: float = 0.0
     _rng: random.Random = dataclasses.field(
         default_factory=lambda: random.Random(0))
 
@@ -35,3 +55,47 @@ class NetworkModel:
             # jitter_frac >= 1 must not undercut (or negate) the light-path RTT
             base = max(base, self.rtt_s)
         return base
+
+    def transfer_with_retry(self, n_bytes: float, max_attempts: int = 4,
+                            base_backoff_s: float = 0.05,
+                            max_backoff_s: float = 1.0) -> TransferResult:
+        """Transfer a payload with capped jittered exponential backoff.
+
+        Each attempt consults `fault_hook` (when set): a "loss" costs one
+        RTT, a "timeout" costs the injected stall, a bandwidth "collapse"
+        succeeds at the collapsed rate; clean attempts cost `transfer_s`.
+        Between failed attempts the caller waits base * 2^k (capped at
+        `max_backoff_s`) jittered to [0.5x, 1.5x) — the jitter draw comes
+        from the model's seeded PRNG, so retry schedules are reproducible.
+        All costs are MODELED seconds (nothing sleeps); attempt counts and
+        cumulative retry latency accumulate on the model for telemetry."""
+        latency = 0.0
+        kind = ""
+        for attempt in range(1, max(max_attempts, 1) + 1):
+            fault = self.fault_hook(n_bytes) if self.fault_hook else None
+            if fault is None:
+                latency += self.transfer_s(n_bytes)
+                self.transfers += 1
+                self.retries += attempt - 1
+                self.retry_latency_s += latency
+                return TransferResult(True, attempt, latency)
+            kind, param = fault
+            if kind == "collapse":
+                # degraded but delivered: pay the collapsed-bandwidth time
+                latency += self.rtt_s + n_bytes * 8 / (
+                    self.bandwidth_mbps * max(param, 1e-3) * 1e6)
+                self.transfers += 1
+                self.retries += attempt - 1
+                self.retry_latency_s += latency
+                return TransferResult(True, attempt, latency, failure=kind)
+            latency += param if kind == "timeout" else self.rtt_s
+            if attempt <= max_attempts - 1:
+                back = min(base_backoff_s * (2.0 ** (attempt - 1)),
+                           max_backoff_s)
+                latency += back * (0.5 + self._rng.random())
+        self.transfers += 1
+        self.retries += max(max_attempts, 1) - 1
+        self.transfer_failures += 1
+        self.retry_latency_s += latency
+        return TransferResult(False, max(max_attempts, 1), latency,
+                              failure=kind)

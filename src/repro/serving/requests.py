@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 _ids = itertools.count()
 
@@ -56,3 +56,14 @@ class Response:
     confidence: float = 0.0
     model_used: str = ""
     quality: Optional[float] = None
+    # fault/degradation telemetry (PICE fault model, docs/serving.md):
+    # `degraded` names the rung the request landed on — "" (none),
+    # "ensemble_partial" (some members faulted, quorum-1 select),
+    # "sketch_groups" (a group fell back to its sketch sentences),
+    # "cloud_full_fallback" (edge path abandoned, cloud re-answered), or
+    # "sketch_passthrough" (deadline blown: the sketch IS the answer)
+    degraded: str = ""
+    retries: int = 0              # network transfer retry attempts
+    hedges: int = 0               # extra ensemble members launched
+    deadline_s: float = 0.0       # per-request budget (0 = none)
+    faults: Dict[str, int] = dataclasses.field(default_factory=dict)

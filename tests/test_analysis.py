@@ -45,6 +45,7 @@ def _expected(root: Path, code_prefix: str):
     ("recompile", "RA2"),
     ("donation", "RA3"),
     ("pallas-spec", "RA4"),
+    ("exceptions", "RA5"),
 ])
 def test_bad_fixtures_exact_codes_and_lines(pass_name, prefix):
     found = {(v.file, v.line, v.code)
