@@ -43,9 +43,16 @@ availability (every request must still get SOME answer — the degradation
 ladder's contract, asserted at 1.0 in CI), SLA attainment, goodput of
 in-deadline tokens, and the degraded-mode histogram.
 
+The offered-load sweep (`--load-sweep`) drives the multiplexed
+serving front-end (serving.frontend) with the trace-driven load generator
+(serving.loadgen): a saturated parity point gates front-end goodput at
+>= MIN_FRONTEND_DIRECT_RATIO of direct engine.generate() throughput, and a
+1x/2x/4x-of-capacity Poisson curve records goodput, SLA attainment, and
+shedding vs offered load.
+
   PYTHONPATH=src python -m benchmarks.paged_engine_bench [--smoke]
-      [--chunk-sweep] [--chaos] [--out BENCH_serving.json]
-      [--timestamp ISO8601]
+      [--chunk-sweep] [--chaos] [--load-sweep]
+      [--out BENCH_serving.json] [--timestamp ISO8601]
 
 --smoke shrinks the workloads to a few requests/steps for CI (and leaves
 the sweep to the dedicated step); --chunk-sweep runs only the sweep and
@@ -709,8 +716,116 @@ def _run_chunk_sweep(cfg, params, smoke, results):
     return failures
 
 
+# ---------------------------------------------------------------------------
+# Serving front-end: goodput vs offered load (trace-driven)
+# ---------------------------------------------------------------------------
+
+# under a saturating arrival pattern the multiplexed front-end must deliver
+# at least this fraction of direct engine.generate() throughput on the same
+# request set — the asyncio driver is allowed bookkeeping overhead, not a
+# batching or scheduling regression
+MIN_FRONTEND_DIRECT_RATIO = 0.9
+
+
+def _run_load_sweep(cfg, params, smoke, results):
+    from repro.core.profiler import RuntimeMonitor
+    from repro.serving import loadgen
+    from repro.serving.frontend import EngineFrontend
+
+    kw = dict(max_batch=MAX_BATCH, max_len=MAX_LEN, kv_backend="paged",
+              page_size=PAGE, eos_id=-1)
+    n_req = 8 if smoke else N_REQ
+    max_new = 16 if smoke else MAX_NEW
+    seed = 11
+    prompt_len = (4, 16)
+    prompts = [loadgen.trace_prompt(seed, i, 4 + (i * 7) % 12,
+                                    cfg.vocab_size)
+               for i in range(n_req)]
+
+    def mk_engine():
+        return InferenceEngine(cfg, params, name="serve-front", **kw)
+
+    # direct baseline: the same prompt population straight through
+    # engine.generate (its internal pending queue does the batching). One
+    # unmeasured pass compiles every shape; the jit registry is shared, so
+    # the front-end engines below start warm too.
+    mk_engine().generate(prompts, max_new=max_new)
+    eng = mk_engine()
+    t0 = time.perf_counter()
+    outs = eng.generate(prompts, max_new=max_new)
+    direct_wall = time.perf_counter() - t0
+    direct_tokens = sum(len(toks) for toks, _ in outs)
+    direct_tps = direct_tokens / direct_wall
+
+    def mk_frontend():
+        return EngineFrontend(mk_engine(), monitor=RuntimeMonitor(),
+                              queue_max=4 * n_req)
+
+    # parity point: every request arrives at t=0 (batch tier, no deadline,
+    # queue sized to admit all) — offered load is off the x-axis and the
+    # front-end is engine-bound, so goodput is directly comparable to the
+    # baseline. This is the CI gate.
+    sat_trace = loadgen.synthesize_trace(
+        1e6, n_req, seed=seed, prompt_len=prompt_len,
+        max_new=(max_new, max_new), tier_mix={"batch": 1.0})
+    sat = loadgen.replay_sync(mk_frontend(), sat_trace, seed=seed,
+                              time_scale=0.0)
+    ratio = sat.goodput_tps / direct_tps
+    emit("paged_engine/frontend_saturated", sat.elapsed_s * 1e6,
+         f"goodput_tps={sat.goodput_tps:.1f};direct_tps={direct_tps:.1f}"
+         f";ratio={ratio:.3f}")
+    print(f"# serving saturated: frontend {sat.goodput_tps:.1f} tok/s vs "
+          f"direct {direct_tps:.1f} tok/s (ratio {ratio:.3f})")
+
+    # offered-load curve: 1x ~= measured capacity, then 2x/4x overload.
+    # Deadline budgets scale with the measured per-request service time so
+    # the SLA-attainment curve degrades for capacity reasons, not because
+    # a fixed budget happens to straddle this host's speed.
+    avg_tokens = direct_tokens / n_req
+    capacity_rps = direct_tps / max(avg_tokens, 1.0)
+    tier_budget_s = max(1.0, 4.0 * direct_wall / n_req * MAX_BATCH)
+    multipliers = (1.0, 2.0) if smoke else (1.0, 2.0, 4.0)
+    reports = loadgen.sweep(mk_frontend, capacity_rps, n_req,
+                            load_multipliers=multipliers, seed=seed,
+                            tier_budget_s=tier_budget_s,
+                            prompt_len=prompt_len, max_new=(8, max_new))
+    curve = []
+    for m, r in zip(multipliers, reports):
+        curve.append({"load_multiplier": m, **r.summary()})
+        emit(f"paged_engine/load_{m:g}x", r.elapsed_s * 1e6,
+             f"offered_rps={r.offered_rps:.2f}"
+             f";goodput_tps={r.goodput_tps:.1f}"
+             f";sla={r.sla_attainment:.3f};shed={r.shed}")
+        print(f"# load {m:g}x ({r.offered_rps:.2f} rps): "
+              f"goodput={r.goodput_tps:.1f} tok/s "
+              f"sla={r.sla_attainment:.2f} shed={r.shed} "
+              f"deadline_cancelled={r.deadline_cancelled}")
+    results["serving"] = {
+        "meta": {"n_req": n_req, "max_new": max_new, "seed": seed,
+                 "capacity_rps": capacity_rps,
+                 "tier_budget_s": tier_budget_s},
+        "direct_tok_s": direct_tps,
+        "saturated": sat.summary(),
+        "frontend_direct_ratio": ratio,
+        "min_frontend_direct_ratio": MIN_FRONTEND_DIRECT_RATIO,
+        "curve": curve,
+    }
+    failures = []
+    if ratio < MIN_FRONTEND_DIRECT_RATIO:
+        failures.append(
+            f"frontend saturated goodput {sat.goodput_tps:.1f} tok/s is "
+            f"{ratio:.3f} of direct {direct_tps:.1f} tok/s "
+            f"(< {MIN_FRONTEND_DIRECT_RATIO})")
+    if sat.shed or sat.failed:
+        failures.append(
+            f"saturated parity run shed={sat.shed} failed={sat.failed}: "
+            f"gate load must fit the queue and never fault")
+    return failures
+
+
 def run(smoke: bool = False, chunk_sweep_only: bool = False,
-        chaos_only: bool = False, out: str = "BENCH_serving.json",
+        chaos_only: bool = False, load_sweep_only: bool = False,
+        out: str = "BENCH_serving.json",
         timestamp: str = ""):
     cfg = TINY_EDGE_A.with_(dtype="float32")
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
@@ -721,7 +836,7 @@ def run(smoke: bool = False, chunk_sweep_only: bool = False,
                         "page_size": PAGE, **_stamp(timestamp)},
                "workloads": {}}
 
-    merge_only = chunk_sweep_only or chaos_only
+    merge_only = chunk_sweep_only or chaos_only or load_sweep_only
     failures = []
     if not merge_only:
         n_req, max_new = (6, 8) if smoke else (N_REQ, MAX_NEW)
@@ -740,6 +855,8 @@ def run(smoke: bool = False, chunk_sweep_only: bool = False,
         failures += _run_chunk_sweep(cfg, params, smoke, results)
     if chaos_only or (not smoke and not merge_only):
         failures += _run_chaos(smoke, results)
+    if load_sweep_only or (not smoke and not merge_only):
+        failures += _run_load_sweep(cfg, params, smoke, results)
 
     if merge_only:
         # enrich an existing trajectory instead of clobbering its
@@ -749,7 +866,7 @@ def run(smoke: bool = False, chunk_sweep_only: bool = False,
         try:
             with open(out) as f:
                 prev = json.load(f)
-            for key in ("chunk_sweep", "chaos"):
+            for key in ("chunk_sweep", "chaos", "serving"):
                 if key in results:
                     prev[key] = results[key]
             prev.setdefault("meta", {}).update(_stamp(timestamp))
@@ -770,6 +887,8 @@ if __name__ == "__main__":
                     help="run only the chunked-prefill stall sweep")
     ap.add_argument("--chaos", action="store_true",
                     help="run only the fault-injection chaos scenario")
+    ap.add_argument("--load-sweep", action="store_true",
+                    help="run only the front-end offered-load sweep")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="machine-readable trajectory output path")
     ap.add_argument("--timestamp", default="",
@@ -777,4 +896,5 @@ if __name__ == "__main__":
                          "(default: current UTC time)")
     args = ap.parse_args()
     run(smoke=args.smoke, chunk_sweep_only=args.chunk_sweep,
-        chaos_only=args.chaos, out=args.out, timestamp=args.timestamp)
+        chaos_only=args.chaos, load_sweep_only=args.load_sweep,
+        out=args.out, timestamp=args.timestamp)

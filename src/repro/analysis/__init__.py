@@ -1,12 +1,13 @@
 """Static invariant checkers for the serving engine and kernels.
 
-Four passes (see docs/static-analysis.md for the rule catalogue):
+Six passes (see docs/static-analysis.md for the rule catalogue):
 
-  host_sync    RA1xx  one-readback-per-step / implicit device syncs
-  recompile    RA2xx  bounded jit shape variants + shared registry
-  donation     RA3xx  donated buffers never read after dispatch
-  pallas_spec  RA4xx  BlockSpec arity/alignment/VMEM contracts
-  exceptions   RA5xx  caught faults must be re-raised or recorded
+  host_sync       RA1xx  one-readback-per-step / implicit device syncs
+  recompile       RA2xx  bounded jit shape variants + shared registry
+  donation        RA3xx  donated buffers never read after dispatch
+  pallas_spec     RA4xx  BlockSpec arity/alignment/VMEM contracts
+  exceptions      RA5xx  caught faults must be re-raised or recorded
+  async_blocking  RA6xx  no blocking calls on the serving event loop
 
 Run `python -m repro.analysis --strict` locally or in CI. Everything in this
 package is stdlib-only: the passes parse source and never import the modules
@@ -17,8 +18,8 @@ from __future__ import annotations
 from pathlib import Path
 from typing import List
 
-from repro.analysis import (donation, exceptions, host_sync, pallas_spec,
-                            recompile, rules)
+from repro.analysis import (async_blocking, donation, exceptions, host_sync,
+                            pallas_spec, recompile, rules)
 from repro.analysis.common import SourceFile, Violation
 
 PASSES = {
@@ -27,6 +28,7 @@ PASSES = {
     "donation": donation.run,
     "pallas-spec": pallas_spec.run,
     "exceptions": exceptions.run,
+    "async-blocking": async_blocking.run,
 }
 
 

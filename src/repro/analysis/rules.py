@@ -77,6 +77,11 @@ RULES = {
     # fault observability
     "RA501": "except clause swallows the exception without re-raising or "
              "recording it to a monitor/telemetry counter",
+    # async-blocking (serving front-end event loop)
+    "RA601": "blocking time.sleep in the async serving layer (stalls every "
+             "in-flight stream; use `await asyncio.sleep`)",
+    "RA602": "bare device sync (jax.device_get / block_until_ready) in an "
+             "async serving path",
 }
 
 # ---------------------------------------------------------------------------
@@ -96,6 +101,9 @@ DONATION_SCOPE = ("serving/engine.py", "training/train_loop.py")
 PALLAS_SCOPE_GLOB = "kernels/*/kernel.py"
 # fault observability: the trees the degradation ladder runs through.
 EXCEPTIONS_SCOPE = ("serving/", "core/")
+# async-blocking: the cooperative event-loop modules (one driver coroutine
+# serves every stream — any blocking call here stalls them all).
+ASYNC_SCOPE = ("serving/frontend.py", "serving/loadgen.py")
 
 # The ONLY function allowed to call jax.device_get without a pragma: the
 # engine's deferred-harvest readback (one device_get per step, the plan/run

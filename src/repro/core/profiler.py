@@ -17,6 +17,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.serving.requests import BoundedRecord
+
 
 @dataclasses.dataclass
 class LatencyModel:
@@ -123,7 +125,17 @@ class RuntimeMonitor:
     net_failures: int = 0
     queue_shed: int = 0
     fallback_primaries: int = 0     # unknown-model guard hits (progressive)
+    admission_rejects: int = 0      # progressive path refused on forecast
+    #                                 KV occupancy (scheduler admission gate)
     degraded: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # arrival-relative request telemetry (serving front-end + pipeline):
+    # TTFT and end-to-end latency measured FROM ARRIVAL — queue wait
+    # included — not from admission. Bounded windows (BoundedRecord) so a
+    # long-running fleet keeps the most recent ~4096 samples.
+    ttft_window: BoundedRecord = dataclasses.field(
+        default_factory=BoundedRecord)
+    latency_window: BoundedRecord = dataclasses.field(
+        default_factory=BoundedRecord)
 
     def on_enqueue(self, expected_tokens: float):
         self.queue_depth += 1
@@ -157,6 +169,22 @@ class RuntimeMonitor:
     def record_degraded(self, mode: str):
         """A request landed on a degradation rung (see Response.degraded)."""
         self.degraded[mode] = self.degraded.get(mode, 0) + 1
+
+    def record_ttft(self, ttft_s: float):
+        """First token delivered `ttft_s` seconds after ARRIVAL (the wait in
+        the admission queue is part of it — a request that queued 2s and
+        decoded its first token in 50ms has TTFT 2.05s, not 0.05s)."""
+        self.ttft_window.append(float(ttft_s))
+
+    def record_latency(self, latency_s: float):
+        """A request finished `latency_s` seconds after arrival."""
+        self.latency_window.append(float(latency_s))
+
+    def ttft_percentile(self, q: float) -> float:
+        return self.ttft_window.percentile(q)
+
+    def latency_percentile(self, q: float) -> float:
+        return self.latency_window.percentile(q)
 
     @property
     def edge_failure_rate(self) -> float:

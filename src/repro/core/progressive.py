@@ -7,12 +7,22 @@ SLM fleet) through the full pipeline —
   (2b) cloud emits a sketch at the scheduler-chosen level,
   (3) the dispatcher queues the expansion task; the execution optimizer plans
       the parallel sentence groups (binary-tree merge),
-  (4) edge SLMs expand groups in parallel; the ensemble picks the most
+  (4) edge SLMs expand groups IN PARALLEL; the ensemble picks the most
       confident expansion per group,
   (5) the stitched response returns to the user.
+
+Engines are MULTIPLEXED: the pipeline wraps the cloud engine and each edge
+engine in an `EngineFrontend` (serving/frontend.py) and submits every role —
+sketch, full cloud answers, per-member expansion fan-outs — as prioritized,
+cancellable requests through the request-handle API instead of owning the
+engines. Ensemble members expand concurrently (`handle_async` gathers
+them on one event loop), and many in-flight `handle_async` calls share one
+engine fleet — the serving front-end's load path. `handle` is the
+synchronous single-request facade over it.
 """
 from __future__ import annotations
 
+import asyncio
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -26,6 +36,7 @@ from repro.core.selection import select_model
 from repro.data import tokenizer as tok
 from repro.serving.engine import InferenceEngine
 from repro.serving.faults import EngineCrash
+from repro.serving.frontend import as_frontend
 from repro.serving.network import NetworkModel
 from repro.serving.requests import Request, Response, SketchTask
 
@@ -52,14 +63,19 @@ class PICEPipeline:
                  network: Optional[NetworkModel] = None,
                  cfg: Optional[PICEConfig] = None,
                  n_edge_devices: Optional[int] = None):
-        self.cloud = cloud_engine
-        self.edges = edge_engines
         # default-construct per pipeline: a dataclass default instance in
         # the signature was SHARED across every pipeline, so one caller
         # mutating cfg.ensemble_size reconfigured all of them
         self.cfg = cfg = cfg or PICEConfig()
         self.network = network or NetworkModel()
         self.monitor = RuntimeMonitor()
+        # every engine is served through a multiplexed front-end: raw
+        # engines get wrapped here, pre-shared EngineFrontends pass through
+        # (several pipelines — or the pipeline plus a load generator — can
+        # then contend for the same slots/pages/priorities)
+        self.cloud = as_frontend(cloud_engine, self.monitor)
+        self.edges = {k: as_frontend(v, self.monitor)
+                      for k, v in edge_engines.items()}
         self.queue = MultiListQueue(max_size=cfg.queue_max,
                                     monitor=self.monitor)
         self.edge_infos = sorted(edge_infos, key=lambda e: e.capability)
@@ -73,11 +89,12 @@ class PICEPipeline:
     def predict_length(self, req: Request) -> int:
         return sketch_lib.heuristic_expected_length(req.query, req.category)
 
-    def _cloud_generate(self, prompt: str, max_new: int,
-                        deadline_s: Optional[float] = None):
+    async def _cloud_generate(self, prompt: str, max_new: int,
+                              deadline_s: Optional[float] = None,
+                              role: str = "cloud_full"):
         toks = tok.encode(prompt)
-        (out, lps), = self.cloud.generate([toks], max_new=max_new,
-                                          deadline_s=deadline_s)
+        (out, lps), = await self.cloud.generate_async(
+            [toks], max_new=max_new, deadline_s=deadline_s, role=role)
         return tok.decode(out), out, lps
 
     def _edge_info_for(self, primary: str) -> EdgeModelInfo:
@@ -91,43 +108,61 @@ class PICEPipeline:
             self.monitor.fallback_primaries += 1
         return info
 
-    def _finish(self, resp: Response) -> Response:
+    def _finish(self, resp: Response,
+                queue_wait_s: float = 0.0) -> Response:
         self.stats[resp.mode] = self.stats.get(resp.mode, 0) + 1
         if resp.degraded:
             self.monitor.record_degraded(resp.degraded)
+        resp.queue_wait_s = queue_wait_s
+        # arrival-relative end-to-end latency window (queue wait included
+        # when the request carried an arrival stamp)
+        self.monitor.record_latency(resp.latency_s)
         return resp
 
     # ------------------------------------------------------------------
-    def _degrade_cloud(self, req: Request, l_i: int, t_start: float,
-                       budget_s: float, deadline: Optional[float],
-                       sketch_text: str, n_sketch_toks: int,
-                       faults: Dict[str, int], retries: int,
-                       net_delay: float = 0.0) -> Response:
+    async def _degrade_cloud(self, req: Request, l_i: int, t_start: float,
+                             budget_s: float, deadline: Optional[float],
+                             sketch_text: str, n_sketch_toks: int,
+                             faults: Dict[str, int], retries: int,
+                             net_delay: float = 0.0,
+                             queue_wait_s: float = 0.0) -> Response:
         """Degradation rungs when the edge path is unavailable (all members
         faulted, the sketch transfer was lost, or the dispatch queue shed
         the task): re-answer from the cloud while budget remains, else hand
         back the sketch itself — every request gets SOME answer."""
         now = time.perf_counter()
         if deadline is None or now < deadline:
-            text, out, _ = self._cloud_generate(
+            text, out, _ = await self._cloud_generate(
                 sketch_lib.cloud_full_prompt(req.query), max_new=l_i,
-                deadline_s=deadline)
+                deadline_s=deadline, role="cloud_full")
             return self._finish(Response(
                 req_id=req.req_id, text=text.strip(), mode="cloud_full",
                 cloud_tokens=n_sketch_toks + len(out),
                 latency_s=time.perf_counter() - t_start + net_delay,
                 network_s=net_delay, model_used=self.cloud.name,
                 degraded="cloud_full_fallback", retries=retries,
-                deadline_s=budget_s, faults=faults))
+                deadline_s=budget_s, faults=faults), queue_wait_s)
         return self._finish(Response(
             req_id=req.req_id, text=(sketch_text or req.query).strip(),
             mode="progressive", cloud_tokens=n_sketch_toks,
             latency_s=now - t_start + net_delay, network_s=net_delay,
             model_used=self.cloud.name, degraded="sketch_passthrough",
-            retries=retries, deadline_s=budget_s, faults=faults))
+            retries=retries, deadline_s=budget_s, faults=faults),
+            queue_wait_s)
 
     def handle(self, req: Request) -> Response:
-        t_start = time.perf_counter()
+        """Synchronous single-request facade over `handle_async`: runs one
+        fresh event loop to completion. Callers already inside a loop (the
+        serving front-end, concurrent pipelines) use `handle_async`."""
+        return asyncio.run(self.handle_async(req))
+
+    async def handle_async(self, req: Request) -> Response:
+        now = time.perf_counter()
+        # latency (and the SLA deadline) anchor at ARRIVAL when the request
+        # carries a stamp — time queued upstream counts against the budget
+        t_start = req.arrival_time_s if req.arrival_time_s is not None \
+            else now
+        queue_wait = now - t_start
         budget_s = req.sla.max_latency_s or 0.0
         deadline = (t_start + budget_s) if budget_s else None
         faults: Dict[str, int] = {}
@@ -146,22 +181,22 @@ class PICEPipeline:
             decision = self.scheduler.schedule(l_i, sla=req.sla)
 
         if decision.mode == "cloud_full":
-            text, out, _ = self._cloud_generate(
+            text, out, _ = await self._cloud_generate(
                 sketch_lib.cloud_full_prompt(req.query), max_new=l_i,
-                deadline_s=deadline)
+                deadline_s=deadline, role="cloud_full")
             return self._finish(Response(
                 req_id=req.req_id, text=text.strip(),
                 mode="cloud_full", cloud_tokens=len(out),
                 latency_s=time.perf_counter() - t_start,
                 model_used=self.cloud.name, deadline_s=budget_s,
-                faults=faults))
+                faults=faults), queue_wait)
 
         # ---- progressive path (2b..5) -----------------------------------
-        sketch_text, sk_toks, _ = self._cloud_generate(
+        sketch_text, sk_toks, _ = await self._cloud_generate(
             sketch_lib.cloud_sketch_prompt(req.query, decision.sketch_tokens),
             max_new=min(decision.sketch_tokens + 10,
                         self.cfg.max_sketch_tokens),
-            deadline_s=deadline)
+            deadline_s=deadline, role="sketch")
         sketch_text = sketch_text.strip()
         sentences = sketch_lib.segment_sketch(sketch_text)
         if not sentences:
@@ -174,9 +209,9 @@ class PICEPipeline:
             # the dispatch queue is full and this task is the least critical
             # of the lot: shed it from the edge path, not from service
             fault("queue_shed")
-            return self._degrade_cloud(req, l_i, t_start, budget_s, deadline,
-                                       sketch_text, len(sk_toks), faults,
-                                       retries=0)
+            return await self._degrade_cloud(
+                req, l_i, t_start, budget_s, deadline, sketch_text,
+                len(sk_toks), faults, retries=0, queue_wait_s=queue_wait)
         self.monitor.on_enqueue(l_i)
 
         # ship the sketch to the edge over the faultable link (retry with
@@ -194,9 +229,10 @@ class PICEPipeline:
             # the sketch never reached the edge fleet: unqueue and degrade
             self.queue.pull_batch(1)
             self.monitor.on_dequeue(l_i)
-            return self._degrade_cloud(req, l_i, t_start, budget_s, deadline,
-                                       sketch_text, len(sk_toks), faults,
-                                       retries, net_delay)
+            return await self._degrade_cloud(
+                req, l_i, t_start, budget_s, deadline, sketch_text,
+                len(sk_toks), faults, retries, net_delay,
+                queue_wait_s=queue_wait)
 
         # Algorithm 2: (re)select the SLM against the remaining budget
         sel = select_model(decision.edge_model, self.edge_infos, l_i,
@@ -242,51 +278,55 @@ class PICEPipeline:
                        for g in plan.groups]
         chosen: List[str] = []
         total_conf, edge_tokens = 0.0, 0
-        group_results = {}
         hedges = 0
+
+        async def run_member(name: str):
+            """One ensemble member's expansion, submitted through its
+            engine's multiplexed front-end. SLA intent rides with the work:
+            the primary member's fan-out is latency-critical (priority 1),
+            extra ensemble members opportunistic (0) — on a shared engine,
+            eviction and admission order favor the critical work (see
+            engine._evict_victim)."""
+            eng = self.edges[name]
+            prio = 1 if name == primary else 0
+            role = "expansion_primary" if name == primary \
+                else "expansion_extra"
+            try:
+                outs = await eng.generate_fanout_async(
+                    prefix_toks, suffix_toks, max_new=max_new,
+                    priority=prio, deadline_s=deadline, role=role)
+            except (EngineCrash, MemoryError) as exc:
+                # injected crash / pool exhaustion: drop this member, scrub
+                # its engine state, and let quorum-1 pick from the rest
+                eng.abort_all()
+                self.monitor.record_edge_result(False)
+                fault("edge_" + type(exc).__name__)
+                return name, None
+            self.monitor.record_edge_result(True)
+            return name, outs
+
+        launched = []
         for name in names:
             if deadline is not None and time.perf_counter() >= deadline:
                 # budget exhausted: don't launch further members — ensemble
                 # selects from whatever already returned (quorum 1)
                 break
-            eng = self.edges[name]
             if name != primary:
                 hedges += 1
-            # SLA intent rides with the work: the primary member's
-            # expansion is latency-critical (priority 1), extra ensemble
-            # members opportunistic (0). In this synchronous single-tenant
-            # loop each engine only ever holds one fanout at a time, so the
-            # distinction bites when a fleet multiplexes engines across
-            # requests — eviction and chunk-ingest bandwidth then favor
-            # the critical work (see engine._evict_victim)
-            prio = 1 if name == primary else 0
-            try:
-                if hasattr(eng, "generate_fanout"):
-                    outs = eng.generate_fanout(prefix_toks, suffix_toks,
-                                               max_new=max_new, priority=prio,
-                                               deadline_s=deadline)
-                else:
-                    outs = eng.generate(
-                        [prefix_toks + sfx for sfx in suffix_toks],
-                        max_new=max_new,
-                        priorities=[prio] * len(suffix_toks),
-                        deadline_s=deadline)
-            except (EngineCrash, MemoryError) as exc:
-                # injected crash / pool exhaustion: drop this member, scrub
-                # its engine state, and let quorum-1 pick from the rest
-                if hasattr(eng, "abort_all"):
-                    eng.abort_all()
-                self.monitor.record_edge_result(False)
-                fault("edge_" + type(exc).__name__)
-                continue
-            self.monitor.record_edge_result(True)
-            group_results[name] = outs
+            launched.append(run_member(name))
+        # members expand CONCURRENTLY (workflow step 4's parallel edge
+        # expansion): each fan-out is its own stream of prioritized
+        # requests on its engine's front-end, all driven by one event loop
+        member_outs = await asyncio.gather(*launched) if launched else []
+        group_results = {n: outs for n, outs in member_outs
+                         if outs is not None}
         if not group_results:
             # every member faulted or the deadline arrived before any could
             # launch: the edge path produced nothing
-            return self._degrade_cloud(req, l_i, t_start, budget_s, deadline,
-                                       sketch_text, len(sk_toks), faults,
-                                       retries, net_delay)
+            return await self._degrade_cloud(
+                req, l_i, t_start, budget_s, deadline, sketch_text,
+                len(sk_toks), faults, retries, net_delay,
+                queue_wait_s=queue_wait)
         degraded = "ensemble_partial" if len(group_results) < len(names) \
             else ""
         for gi in range(len(plan.groups)):
@@ -318,7 +358,7 @@ class PICEPipeline:
             network_s=net_delay,
             confidence=total_conf / max(len(plan.groups), 1),
             model_used=primary, degraded=degraded, retries=retries,
-            hedges=hedges, deadline_s=budget_s, faults=faults))
+            hedges=hedges, deadline_s=budget_s, faults=faults), queue_wait)
 
     def _ensemble_names(self, primary: str) -> List[str]:
         names = [primary]

@@ -92,6 +92,34 @@ class DynamicScheduler:
         rho = min(rho, 0.95)
         return 1.0 / (1.0 - rho)
 
+    # forecast-occupancy ceiling for ADMISSION (not just pressure): above
+    # it the progressive path is refused outright and the request answers
+    # from the cloud — sketching work the pool cannot hold only converts
+    # admission failures into mid-flight evictions
+    admission_ceiling: float = 0.92
+
+    def forecast_utilization(self, expected_len: int = 0) -> float:
+        """Forecast KV occupancy if this request's expansion is admitted:
+        max(physical, predicted-from-queue) utilization plus the pages the
+        request's own expected output would pin. 0.0 without page telemetry
+        (dense backend), so admission is inert there."""
+        mon = self.monitor
+        if mon.kv_pages_total <= 0:
+            return 0.0
+        util = max(mon.kv_utilization, mon.kv_predicted_utilization)
+        if expected_len > 0 and mon.kv_page_tokens > 0:
+            extra = math.ceil(expected_len / mon.kv_page_tokens)
+            util += extra / mon.kv_pages_total
+        return min(util, 1.0)
+
+    def admit_progressive(self, expected_len: int) -> bool:
+        """Eq.(2)'s memory leg as an ADMISSION decision: the progressive
+        path is only open while the forecast occupancy — queued expected
+        tokens included, so admission tightens as the backlog's predicted
+        lengths grow — stays under `admission_ceiling`."""
+        return self.forecast_utilization(expected_len) < \
+            self.admission_ceiling
+
     # -- Eq. (2) -----------------------------------------------------------
     def e2e_latency(self, sketch_tokens: int, expected_len: int,
                     edge: EdgeModelInfo, parallelism: int) -> float:
@@ -146,6 +174,9 @@ class DynamicScheduler:
         error (SLM capability floor on sketch ratio) -> throughput (shortest
         feasible sketch = fewest cloud tokens) -> edge cost."""
         cloud_lat = self.cloud.f(expected_len)
+        if not self.admit_progressive(expected_len):
+            self.monitor.admission_rejects += 1
+            return self._cloud_full_decision(cloud_lat, expected_len)
         options: List[ScheduleDecision] = []
         for name, edge in self.edges.items():
             min_tokens = int(math.ceil(edge.min_sketch_ratio * expected_len))
@@ -169,15 +200,20 @@ class DynamicScheduler:
                         "edge_cost": float(expected_len),
                     }))
         if not options:
-            return ScheduleDecision(mode="cloud_full",
-                                    est_latency_s=cloud_lat,
-                                    est_cloud_latency_s=cloud_lat,
-                                    metrics={"error": 0.0, "latency": cloud_lat,
-                                             "server_cost": float(expected_len),
-                                             "edge_cost": 0.0,
-                                             "throughput": -1.0 / max(expected_len, 1)})
+            return self._cloud_full_decision(cloud_lat, expected_len)
         order = sla.metric_order if sla else SLA().metric_order
         return lexicographic_select(options, order)
+
+    @staticmethod
+    def _cloud_full_decision(cloud_lat: float,
+                             expected_len: int) -> ScheduleDecision:
+        return ScheduleDecision(
+            mode="cloud_full", est_latency_s=cloud_lat,
+            est_cloud_latency_s=cloud_lat,
+            metrics={"error": 0.0, "latency": cloud_lat,
+                     "server_cost": float(expected_len),
+                     "edge_cost": 0.0,
+                     "throughput": -1.0 / max(expected_len, 1)})
 
 
 def lexicographic_select(options: List[ScheduleDecision],

@@ -41,6 +41,7 @@ import numpy as np
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.models.paged_cache import PageAllocator
+from repro.serving.requests import BoundedRecord
 from repro.serving.sampler import SamplerConfig, sample, token_logprob
 
 
@@ -274,6 +275,11 @@ class _Resume:
     swap: Optional[dict] = None
 
 
+# Public name for the request-handle admission API (`InferenceEngine
+# .try_admit`): the serving front-end builds these for fresh submissions.
+EngineRequest = _Resume
+
+
 class InferenceEngine:
     """Continuous-batching engine for one model."""
 
@@ -320,10 +326,10 @@ class InferenceEngine:
         # req_ids a _run loop is still driving: their admission stamps must
         # never be pruned even while they sit evicted in the resume queue
         self._inflight: set = set()
-        self.ttft: Dict[int, float] = {}
+        self.ttft: Dict[int, float] = BoundedRecord(self._admit_stamp_cap)
         # req_id -> prompt tokens dropped at admission (prompt > max_len);
         # the matching Slot carries `truncated` while it lives
-        self.truncations: Dict[int, int] = {}
+        self.truncations: Dict[int, int] = BoundedRecord(self._admit_stamp_cap)
         self.prefill_chunk = 0
         # deferred harvest: (commit slots, device toks, device lps) of the
         # decode step dispatched last step(), read back at the next step()
@@ -964,9 +970,8 @@ class InferenceEngine:
         s.priority = priority
         s.truncated = dropped > 0
         if dropped:
+            # BoundedRecord evicts the oldest entries past the cap
             self.truncations[req_id] = dropped
-            while len(self.truncations) > self._admit_stamp_cap:
-                self.truncations.pop(next(iter(self.truncations)))
         s.arrival = self._arrivals
         self._arrivals += 1
         self._track_peak()
@@ -1008,12 +1013,10 @@ class InferenceEngine:
         s.generated += 1
         self.tokens_generated += 1
         if s.generated == 1 and s.req_id in self._t_admit:
+            # BoundedRecord keeps the most recent window in long-running
+            # fleets (insertion order, oldest evicted past the cap)
             self.ttft[s.req_id] = (time.perf_counter()
                                    - self._t_admit.pop(s.req_id))
-            # bound the telemetry in long-running fleets: keep the most
-            # recent window (dicts preserve insertion order)
-            while len(self.ttft) > 4096:
-                self.ttft.pop(next(iter(self.ttft)))
         # context capacity counts as completion: decoding past max_len would
         # overwrite live cache positions (in either backend), so both
         # backends stop at the same point and stay bit-identical
@@ -1446,6 +1449,68 @@ class InferenceEngine:
         finally:
             self._inflight -= mine
 
+    # ------------------------------------------------------------------
+    # Request-handle admission API. `try_admit` is ONE admission attempt for
+    # a queued (fresh or preempted) request and `drain_resumes` hands back
+    # the work eviction preempted — the synchronous `_run` loop below and
+    # the async serving front-end (serving/frontend.py) drive the engine
+    # through these same two calls, so a multiplexed stream of requests
+    # takes exactly the admission path a dedicated run would.
+    # ------------------------------------------------------------------
+    def try_admit(self, r: _Resume) -> Optional[int]:
+        """Attempt to admit `r`. Returns the slot index on success, or None
+        when the request must wait for slots/pages to free. Raises
+        MemoryError when the engine is IDLE and the request still cannot
+        fit: no running work will ever free enough pool.
+
+        May mutate `r`: an injected swap-upload loss (`swap_fault_hook`)
+        degrades a host-tier resume to the evict-and-replay path — r.prompt
+        and the carried tokens are exactly what a non-swap eviction queued,
+        so the replay is the same bit-identical path; a fork resume whose
+        parked prefix is gone falls back to a monolithic prompt."""
+        if not self.free_slots():
+            return None
+        if r.swap is not None and self.swap_fault_hook is not None \
+                and self.swap_fault_hook(r.req_id):
+            self.alloc.drop_hosted(r.req_id)
+            r.swap = None
+            self.swap_losses += 1
+        if r.swap is not None:
+            # demoted request: promote its host-tier pages back and
+            # re-enter decode directly (no prefill replay)
+            if not self.can_admit_swap(r.req_id):
+                if not any(s.active for s in self.slots):
+                    raise MemoryError(
+                        f"request {r.req_id} cannot fit in the page pool")
+                return None                      # wait for pages to free
+            return self._admit_swapped(r)
+        if r.share_from >= 0 and not self.slots[r.share_from].parked:
+            r.share_from, r.suffix = -1, []       # prefix gone: monolithic
+        if r.share_from >= 0:
+            ok = self.can_admit_fork(
+                r.share_from, len(r.suffix) + len(r.carry_tokens))
+        else:
+            ok = self.can_admit(len(r.prompt) + len(r.carry_tokens))
+        if not ok:
+            if not any(s.active for s in self.slots):
+                raise MemoryError(
+                    f"request {r.req_id} cannot fit in the page pool")
+            return None                          # wait for pages to free
+        return self.add_request(
+            r.req_id, r.prompt, r.max_new,
+            carry_tokens=r.carry_tokens, carry_lps=r.carry_lps,
+            share_from=r.share_from if r.share_from >= 0 else None,
+            suffix=r.suffix, priority=r.priority)
+
+    def drain_resumes(self) -> List[_Resume]:
+        """Take the work eviction preempted, in re-admission order: oldest
+        victim first (eviction queued victims youngest-first as it found
+        them). Callers put these at the HEAD of their pending queue so
+        preempted work re-enters before fresh submissions."""
+        out = list(reversed(self._resume_queue))
+        self._resume_queue.clear()
+        return out
+
     def _run_inner(self, pending: List[_Resume], n: int,
                    deadline_s: Optional[float] = None
                    ) -> List[Tuple[List[int], List[float]]]:
@@ -1453,47 +1518,10 @@ class InferenceEngine:
         submitted: Dict[int, int] = {}          # req_id -> slot
         while pending or any(s.active for s in self.slots):
             while pending and self.free_slots():
-                r = pending[0]
-                if r.swap is not None and self.swap_fault_hook is not None \
-                        and self.swap_fault_hook(r.req_id):
-                    # injected swap-upload loss: drop the host snapshot and
-                    # degrade to the evict-and-replay resume — r.prompt and
-                    # the carried tokens are exactly what a non-swap
-                    # eviction queued, so the replay is the same
-                    # bit-identical path (composition, not a new mechanism)
-                    self.alloc.drop_hosted(r.req_id)
-                    r.swap = None
-                    self.swap_losses += 1
-                if r.swap is not None:
-                    # demoted request: promote its host-tier pages back and
-                    # re-enter decode directly (no prefill replay)
-                    if not self.can_admit_swap(r.req_id):
-                        if not any(s.active for s in self.slots):
-                            raise MemoryError(
-                                f"request {r.req_id} cannot fit in the "
-                                "page pool")
-                        break                    # wait for pages to free
-                    pending.pop(0)
-                    submitted[r.req_id] = self._admit_swapped(r)
-                    continue
-                if r.share_from >= 0 and not self.slots[r.share_from].parked:
-                    r.share_from, r.suffix = -1, []   # prefix gone: monolithic
-                if r.share_from >= 0:
-                    ok = self.can_admit_fork(
-                        r.share_from, len(r.suffix) + len(r.carry_tokens))
-                else:
-                    ok = self.can_admit(len(r.prompt) + len(r.carry_tokens))
-                if not ok:
-                    if not any(s.active for s in self.slots):
-                        raise MemoryError(
-                            f"request {r.req_id} cannot fit in the page pool")
+                slot = self.try_admit(pending[0])
+                if slot is None:
                     break                        # wait for pages to free
-                pending.pop(0)
-                slot = self.add_request(
-                    r.req_id, r.prompt, r.max_new,
-                    carry_tokens=r.carry_tokens, carry_lps=r.carry_lps,
-                    share_from=r.share_from if r.share_from >= 0 else None,
-                    suffix=r.suffix, priority=r.priority)
+                r = pending.pop(0)
                 submitted[r.req_id] = slot
             self.step()
             if deadline_s is not None and time.perf_counter() > deadline_s \
@@ -1505,9 +1533,7 @@ class InferenceEngine:
                     if self.slots[sl].active:
                         self.cancel(rid)
                         self.deadline_cancels += 1
-                if self._resume_queue:
-                    pending[:0] = reversed(self._resume_queue)
-                    self._resume_queue.clear()
+                pending[:0] = self.drain_resumes()
                 for r in pending:
                     if r.swap is not None:
                         self.alloc.drop_hosted(r.req_id)
@@ -1525,11 +1551,8 @@ class InferenceEngine:
                     s.evicted = False
                     continue                     # resubmitted via _resume_queue
                 results[rid] = (list(s.tokens), list(s.logprobs))
-            if self._resume_queue:
-                # preempted work goes to the queue head, oldest first
-                # (victims were queued youngest-first as eviction found them)
-                pending[:0] = reversed(self._resume_queue)
-                self._resume_queue.clear()
+            # preempted work goes to the queue head, oldest first
+            pending[:0] = self.drain_resumes()
         return [results[i] for i in range(n)]
 
     def score(self, tokens: List[int]) -> Tuple[float, np.ndarray]:

@@ -1,0 +1,21 @@
+"""Bad async front-end fixture: blocking calls on the serving event loop.
+
+One driver coroutine serves every stream here, so each of these stalls all
+in-flight requests at once. The device syncs double-report with the
+host-sync pass (RA1xx), which also scopes serving/.
+"""
+import time
+from time import sleep
+
+import jax
+
+
+async def drive_blocking(engine):
+    time.sleep(0.01)                        # expect: RA601
+    toks = jax.device_get(engine.buf)       # expect: RA103,RA602
+    engine.out.block_until_ready()          # expect: RA104,RA602
+    return toks
+
+
+def tick_between_steps():
+    sleep(0.5)                              # expect: RA601

@@ -1,0 +1,18 @@
+"""Good async front-end fixture: cooperative yields only.
+
+The engine's own step() is the sanctioned blocking boundary; between steps
+the driver yields with awaited asyncio sleeps (an awaited bare `sleep` must
+not be mistaken for time.sleep).
+"""
+import asyncio
+from asyncio import sleep
+
+
+async def drive(engine):
+    while engine.has_work():
+        engine.step()
+        await asyncio.sleep(0)
+
+
+async def backoff_briefly():
+    await sleep(0.01)

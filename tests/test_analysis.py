@@ -46,6 +46,7 @@ def _expected(root: Path, code_prefix: str):
     ("donation", "RA3"),
     ("pallas-spec", "RA4"),
     ("exceptions", "RA5"),
+    ("async-blocking", "RA6"),
 ])
 def test_bad_fixtures_exact_codes_and_lines(pass_name, prefix):
     found = {(v.file, v.line, v.code)

@@ -1,0 +1,331 @@
+"""Multiplexed serving front-end (serving/frontend.py) and the trace-driven
+load generator (serving/loadgen.py).
+
+The load-bearing claim: because decoding is greedy, a stream served
+MULTIPLEXED — interleaved with other roles, preempted, resumed, faulted —
+is bit-identical to the same request run alone on a fresh engine. Batch
+composition changes when tokens arrive, never which tokens. The tests here
+drive mixed-priority co-tenancy with forced eviction, a mid-run cancel, and
+a seeded FaultPlan on the SHARED engine, checking every survivor against
+its isolated run; plus streaming deltas, deadlines, backpressure shedding,
+trace determinism, arrival-relative TTFT, and the scheduler's
+forecast-memory admission gate (ISSUE satellites S1-S3).
+"""
+import asyncio
+import time
+
+import jax
+import pytest
+
+from repro.core.profiler import LatencyModel, RuntimeMonitor
+from repro.core.scheduler import DynamicScheduler, EdgeModelInfo
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serving import loadgen
+from repro.serving.engine import InferenceEngine
+from repro.serving.faults import FaultInjector, FaultPlan
+from repro.serving.frontend import (CompletionRequest, EngineFrontend,
+                                    as_frontend)
+from repro.serving.network import NetworkModel
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                   max_seq_len=512, dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return transformer.init_params(TINY, jax.random.PRNGKey(0))
+
+
+def _engine(params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_len", 128)
+    kw.setdefault("kv_backend", "paged")
+    kw.setdefault("page_size", 8)
+    return InferenceEngine(TINY, params, **kw)
+
+
+def _isolated(params, prompt, max_new):
+    """The reference stream: the same request alone on a fresh engine."""
+    (toks, lps), = _engine(params).generate([list(prompt)], max_new=max_new)
+    return toks, lps
+
+
+def _assert_drained(eng):
+    assert not any(s.active for s in eng.slots)
+    assert not eng._resume_queue
+    assert eng.alloc.pages_in_use == 0
+    assert not eng.alloc.hosted
+
+
+# ---------------------------------------------------------------------------
+# S3: multiplexed bit-identity under contention, eviction, and cancel
+# ---------------------------------------------------------------------------
+
+def test_multiplexed_streams_bit_identical_with_eviction_and_cancel(params):
+    """Six mixed-priority requests multiplexed onto a 3-slot engine with a
+    page pool too small for the working set (forcing priority eviction +
+    resume), plus one mid-run cancel. Every request that ran to completion
+    must be bit-identical to its isolated run; the cancelled one must be a
+    strict prefix of its isolated run."""
+    prompts = [[7, 8, 9, 10], [20, 21, 22], [30, 31, 32, 33],
+               [40, 41, 42], [50, 51, 52, 53], [60, 61, 62]]
+    roles = ["sketch", "sketch", "expansion_primary", "expansion_primary",
+             "expansion_extra", "expansion_extra"]
+    max_new = 12
+    eng = _engine(params, max_batch=3, max_len=64, n_pages=5)
+    fe = EngineFrontend(eng)
+
+    async def main():
+        handles = [fe.submit(CompletionRequest(prompt=p, max_tokens=max_new,
+                                               role=r), sheddable=False)
+                   for p, r in zip(prompts, roles)]
+        victim = handles[4]               # an expansion_extra, priority 0
+
+        async def cancel_after_two():
+            seen = 0
+            async for d in victim.stream():
+                if d.finish_reason:
+                    return
+                seen += 1
+                if seen == 2:
+                    victim.cancel()
+                    return
+
+        results = await asyncio.gather(
+            *[h.wait() for h in handles], cancel_after_two())
+        return handles, results[:len(handles)]
+
+    handles, _ = asyncio.run(main())
+    assert eng.evictions >= 1, "scenario must actually exercise eviction"
+    for i, h in enumerate(handles):
+        ref_toks, ref_lps = _isolated(params, prompts[i], max_new)
+        if i == 4 and h.state == "cancelled":
+            assert 1 <= len(h.tokens) < len(ref_toks)
+            assert h.tokens == ref_toks[:len(h.tokens)]
+        else:
+            assert h.state == "done", (i, h.state, h.finish_reason)
+            assert h.tokens == ref_toks, f"request {i} diverged multiplexed"
+            assert h.logprobs == pytest.approx(ref_lps)
+    _assert_drained(eng)
+
+
+def test_fault_plan_on_shared_engine_keeps_survivors_bit_identical(params):
+    """A seeded FaultPlan attached THROUGH the front-end (hook assignments
+    must forward to the wrapped engine): the injected slot crash cancels
+    exactly one request; every other stream stays bit-identical to its
+    isolated run, and every handle settles — availability 1.0, nothing
+    fails or hangs."""
+    prompts = [[7, 8, 9, 10], [20, 21, 22], [30, 31, 32, 33], [40, 41, 42]]
+    max_new = 10
+    eng = _engine(params)
+    fe = EngineFrontend(eng)
+    inj = FaultInjector(FaultPlan(seed=0, crash_steps=(3,)))
+    inj.attach(engines=[fe])
+    assert eng.step_hook == inj.on_step, "hook must land on the raw engine"
+
+    async def main():
+        handles = [fe.submit(
+            CompletionRequest(prompt=p, max_tokens=max_new, priority=pr),
+            sheddable=False)
+            for p, pr in zip(prompts, [1, 1, 1, 0])]
+        await asyncio.gather(*[h.wait() for h in handles])
+        return handles
+
+    handles = asyncio.run(main())
+    inj.detach()
+    assert inj.events["slot_crash"] == 1
+    crashed = [h for h in handles if h.state == "cancelled"]
+    assert len(crashed) == 1
+    assert crashed[0] is handles[3], "lowest-priority slot takes the crash"
+    for h, p in zip(handles, prompts):
+        assert h.done, "availability: every request must settle"
+        if h.state == "done":
+            assert h.tokens == _isolated(params, p, max_new)[0]
+    _assert_drained(eng)
+
+
+def test_sync_facade_matches_engine_generate(params):
+    prompts = [[5, 6, 7], [11, 12, 13, 14], [21, 22]]
+    ref = _engine(params).generate(prompts, max_new=8)
+    out = EngineFrontend(_engine(params)).generate(prompts, max_new=8)
+    assert out == ref
+
+
+def test_fanout_facade_matches_engine_and_stamps_arrival(params):
+    """The COW fan-out facade forks enqueue directly (not via submit): it
+    must still stamp arrival so TTFT accounting works, and must match the
+    engine's own generate_fanout bit for bit."""
+    prefix, suffixes = [5, 6, 7, 8], [[10], [11], [12]]
+    ref = _engine(params).generate_fanout(prefix, suffixes, max_new=6)
+    mon = RuntimeMonitor()
+    fe = EngineFrontend(_engine(params), monitor=mon)
+    out = fe.generate_fanout(prefix, suffixes, max_new=6)
+    assert out == ref
+    assert len(mon.ttft_window) == len(suffixes)
+
+
+# ---------------------------------------------------------------------------
+# streaming deltas
+# ---------------------------------------------------------------------------
+
+def test_stream_yields_contiguous_deltas_and_terminal_marker(params):
+    fe = EngineFrontend(_engine(params))
+    req = CompletionRequest(prompt=[9, 10, 11], max_tokens=6)
+
+    async def main():
+        deltas = []
+        async for d in fe.stream(req, sheddable=False):
+            deltas.append(d)
+        return deltas
+
+    deltas = asyncio.run(main())
+    body, last = deltas[:-1], deltas[-1]
+    assert [d.index for d in body] == list(range(len(body)))
+    assert all(d.finish_reason == "" for d in body)
+    assert last.token == -1 and last.finish_reason in ("stop", "length")
+    ref_toks, _ = _isolated(params, req.prompt, 6)
+    assert [d.token for d in body] == ref_toks
+
+
+# ---------------------------------------------------------------------------
+# deadlines and backpressure
+# ---------------------------------------------------------------------------
+
+def test_deadline_cancels_midrun_with_partial_tokens(params):
+    eng = _engine(params)
+    fe = EngineFrontend(eng)
+    fe.step_hook = lambda e: time.sleep(0.01)   # pace steps for the sweep
+
+    async def main():
+        doomed = fe.submit(CompletionRequest(
+            prompt=[5, 6, 7], max_tokens=64,
+            deadline_s=time.perf_counter() + 0.05), sheddable=False)
+        calm = fe.submit(CompletionRequest(prompt=[20, 21, 22],
+                                           max_tokens=8), sheddable=False)
+        await asyncio.gather(doomed.wait(), calm.wait())
+        return doomed, calm
+
+    doomed, calm = asyncio.run(main())
+    assert doomed.finish_reason == "deadline"
+    assert doomed.state == "cancelled"
+    assert 0 < len(doomed.tokens) < 64
+    assert eng.deadline_cancels == 1
+    # the co-tenant is untouched and bit-identical
+    assert calm.state == "done"
+    assert calm.tokens == _isolated(params, [20, 21, 22], 8)[0]
+    _assert_drained(eng)
+
+
+def test_full_queue_sheds_and_survivors_complete(params):
+    fe = EngineFrontend(_engine(params), queue_max=2)
+    handles = [fe.submit(CompletionRequest(prompt=[10 + i, 3], max_tokens=6))
+               for i in range(6)]          # no loop yet: nothing drains
+    assert fe.shed == 4, "queue_max=2 must shed 4 of 6 sheddable submits"
+    shed = [h for h in handles if h.state == "shed"]
+    assert len(shed) == 4
+    assert all(h.finish_reason == "shed" and h.done for h in shed)
+
+    async def main():
+        await asyncio.gather(*[h.wait() for h in handles])
+
+    asyncio.run(main())
+    assert fe.completed == 2
+    survivors = [h for h in handles if h.state == "done"]
+    assert len(survivors) == 2
+    for h in survivors:
+        assert h.tokens == _isolated(params, h.req.prompt, 6)[0]
+
+
+# ---------------------------------------------------------------------------
+# load generator: determinism, replay, arrival-relative metrics
+# ---------------------------------------------------------------------------
+
+def test_trace_synthesis_deterministic_and_roundtrips(tmp_path):
+    a = loadgen.synthesize_trace(50.0, 20, seed=3)
+    b = loadgen.synthesize_trace(50.0, 20, seed=3)
+    c = loadgen.synthesize_trace(50.0, 20, seed=4)
+    assert a == b, "(seed, rate) must name ONE workload"
+    assert a != c
+    arrivals = [e.arrival_s for e in a]
+    assert arrivals == sorted(arrivals)
+    assert all(e.tier in ("interactive", "standard", "batch") for e in a)
+    p = tmp_path / "trace.jsonl"
+    loadgen.save_trace(str(p), a)
+    assert loadgen.load_trace(str(p)) == a
+    # prompt content derives from (seed, index) alone
+    assert loadgen.trace_prompt(3, 5, 8, 128) == \
+        loadgen.trace_prompt(3, 5, 8, 128)
+    assert all(0 <= t < 128 for t in loadgen.trace_prompt(3, 5, 8, 128))
+
+
+def test_replay_reports_outcomes_and_arrival_relative_ttft(params):
+    mon = RuntimeMonitor()
+    fe = EngineFrontend(_engine(params), monitor=mon, queue_max=32)
+    trace = loadgen.synthesize_trace(200.0, 6, seed=1, prompt_len=(3, 8),
+                                     max_new=(4, 8),
+                                     tier_mix={"batch": 1.0})
+    report = loadgen.replay_sync(fe, trace, seed=1, offered_rps=200.0)
+    assert report.n_requests == 6
+    assert report.completed == 6 and report.shed == 0 and report.failed == 0
+    assert report.sla_attainment == 1.0   # batch tier: completing meets it
+    assert report.good_tokens == report.total_tokens > 0
+    assert report.goodput_tps > 0
+    # TTFT/latency are measured from arrival and flow through the monitor
+    assert len(mon.ttft_window) == 6
+    assert report.ttft_p95_s >= report.ttft_p50_s > 0
+    assert report.latency_p95_s >= report.ttft_p50_s
+
+
+def test_as_frontend_wraps_once_and_passes_none(params):
+    assert as_frontend(None) is None
+    fe = as_frontend(_engine(params))
+    assert isinstance(fe, EngineFrontend)
+    assert as_frontend(fe) is fe
+
+
+# ---------------------------------------------------------------------------
+# S1: scheduler admission on forecast memory
+# ---------------------------------------------------------------------------
+
+def _sched():
+    cloud = LatencyModel(t0=0.5, rate=20.0)
+    edges = [EdgeModelInfo(name="small",
+                           latency=LatencyModel(t0=0.5, rate=25.0),
+                           capability=0.5),
+             EdgeModelInfo(name="big",
+                           latency=LatencyModel(t0=0.5, rate=10.0),
+                           capability=0.8)]
+    return DynamicScheduler(cloud, edges, NetworkModel(), 4)
+
+
+def test_admission_tightens_as_queued_expected_tokens_grow():
+    """The progressive path admits on max(physical, kv-predicted)
+    utilization plus the request's own footprint: growing the backlog's
+    predicted lengths (on_enqueue) tightens admission until schedule()
+    refuses the progressive path outright."""
+    s = _sched()
+    s.monitor.kv_pages_total = 100
+    s.monitor.kv_pages_used = 40
+    s.monitor.kv_page_tokens = 16
+    f0 = s.forecast_utilization(500)
+    assert s.admit_progressive(500)
+    d0 = s.schedule(500)
+    assert d0.mode == "progressive"
+    assert s.monitor.admission_rejects == 0
+
+    s.monitor.on_enqueue(800.0)           # predicted backlog: +50 pages
+    assert s.forecast_utilization(500) > f0, "forecast must tighten"
+    assert not s.admit_progressive(500)
+    d1 = s.schedule(500)
+    assert d1.mode == "cloud_full"
+    assert s.monitor.admission_rejects == 1
+
+
+def test_admission_inert_without_page_telemetry():
+    s = _sched()                          # dense backend: no kv geometry
+    assert s.forecast_utilization(10 ** 6) == 0.0
+    assert s.admit_progressive(10 ** 6)
+    assert s.schedule(500).mode == "progressive"
+    assert s.monitor.admission_rejects == 0
